@@ -1,0 +1,90 @@
+"""Kernel micro-benchmarks: Pallas (interpret mode) vs jnp reference.
+
+Interpret-mode wall time is NOT TPU performance — correctness + block
+configuration are the deliverables here; the roofline targets come from
+the dry-run.  We also report the XLA-fused reference time as the CPU
+baseline the interpret kernels are validated against."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def run(csv_rows: list[str]) -> None:
+    from repro.kernels.flash_attention.ops import flash_attention, mha_reference
+    from repro.kernels.decode_attention.ops import (
+        decode_attention, decode_attention_reference,
+    )
+    from repro.kernels.env_step.ops import env_step, env_substep_reference
+
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+
+    # flash attention
+    B, H, Hkv, S, D = 1, 4, 2, 512, 64
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+    t_k = _time(lambda *a: flash_attention(*a, block_q=128, block_k=128), q, k, v)
+    t_r = _time(mha_reference, q, k, v)
+    err = float(jnp.max(jnp.abs(
+        flash_attention(q, k, v) - mha_reference(q, k, v)
+    )))
+    csv_rows.append(f"kernel_flash_attn_interpret,{t_k*1e6:.0f},err={err:.1e}")
+    csv_rows.append(f"kernel_flash_attn_ref,{t_r*1e6:.0f},xla-fused")
+
+    # decode attention
+    T = 4096
+    qd = jax.random.normal(ks[0], (2, 8, 64), jnp.float32)
+    kd = jax.random.normal(ks[1], (2, 2, T, 64), jnp.float32)
+    vd = jax.random.normal(ks[2], (2, 2, T, 64), jnp.float32)
+    lens = jnp.array([T, T // 2], jnp.int32)
+    t_k = _time(lambda *a: decode_attention(*a, block_t=512), qd, kd, vd, lens)
+    t_r = _time(decode_attention_reference, qd, kd, vd, lens)
+    err = float(jnp.max(jnp.abs(
+        decode_attention(qd, kd, vd, lens)
+        - decode_attention_reference(qd, kd, vd, lens)
+    )))
+    csv_rows.append(f"kernel_decode_attn_interpret,{t_k*1e6:.0f},err={err:.1e}")
+    csv_rows.append(f"kernel_decode_attn_ref,{t_r*1e6:.0f},xla-fused")
+
+    # env step
+    N = 1024
+    state = jax.random.normal(ks[0], (N, 28), jnp.float32) * 0.3
+    state = state.at[:, 2].set(0.55)
+    action = jax.random.uniform(ks[1], (N, 8), jnp.float32, -1, 1)
+    t_k = _time(lambda *a: env_step(*a, n_sub=5, block_n=256), state, action)
+
+    def ref5(s, a):
+        r_total = jnp.zeros(s.shape[0])
+        for _ in range(5):
+            s, r = env_substep_reference(s, a)
+            r_total = r_total + r
+        return s, r_total
+
+    ref5_j = jax.jit(ref5)
+    t_r = _time(ref5_j, state, action)
+    out_k, _ = env_step(state, action, n_sub=5, block_n=256)
+    out_r, _ = ref5_j(state, action)
+    err = float(jnp.max(jnp.abs(out_k - out_r)))
+    csv_rows.append(f"kernel_env_step_interpret,{t_k*1e6:.0f},err={err:.1e}")
+    csv_rows.append(f"kernel_env_step_ref,{t_r*1e6:.0f},xla-fused")
+
+
+if __name__ == "__main__":
+    rows: list[str] = []
+    run(rows)
+    print("\n".join(rows))

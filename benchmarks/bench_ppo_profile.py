@@ -1,0 +1,56 @@
+"""Paper Figure 4: where does PPO iteration time go?
+
+Profiles CleanRL-style PPO (N=8, paper Table 3 hyperparameters) over
+For-loop / ThreadPool(sync) / ThreadPool(async) engines, reporting the
+four buckets: Environment Step / Inference / Training / Other."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def profile_engine(engine: str, task: str = "Pong-v5", num_envs: int = 8,
+                   batch_size: int | None = None, iters: int = 3) -> dict:
+    import repro
+    from repro.rl.ppo import PPOConfig, train_host
+
+    pool = repro.make(task, engine=engine, num_envs=num_envs,
+                      batch_size=batch_size)
+    M = getattr(pool, "batch_size", num_envs)
+    cfg = PPOConfig(
+        total_steps=iters * 32 * M, num_steps=32, minibatches=4, epochs=4,
+        lr=2.5e-4,
+    )
+    try:
+        _, _, hist, prof = train_host(pool, pool.spec, cfg, seed=0)
+    finally:
+        if hasattr(pool, "close"):
+            pool.close()
+    total = sum(prof.values())
+    prof["total"] = total
+    prof["env_frac"] = prof["env_step"] / max(total, 1e-9)
+    return prof
+
+
+def run(csv_rows: list[str]) -> None:
+    for engine, m in [("forloop", None), ("thread", None), ("thread", 4)]:
+        tag = engine + ("-async" if m else "-sync")
+        try:
+            prof = profile_engine(engine, batch_size=m)
+            for bucket in ("env_step", "inference", "train", "other"):
+                csv_rows.append(
+                    f"ppo_profile_{tag}_{bucket},{prof[bucket]*1e6:.0f},"
+                    f"{100*prof[bucket]/max(prof['total'],1e-9):.1f}%"
+                )
+            csv_rows.append(
+                f"ppo_profile_{tag}_total,{prof['total']*1e6:.0f},"
+                f"env_frac={prof['env_frac']*100:.1f}%"
+            )
+        except Exception as e:  # pragma: no cover
+            csv_rows.append(f"ppo_profile_{tag}_FAILED,0,{e}")
+
+
+if __name__ == "__main__":
+    rows: list[str] = []
+    run(rows)
+    print("\n".join(rows))

@@ -1,0 +1,106 @@
+"""Paper Table 1 / Figure 3: pure environment simulation throughput.
+
+Engines × {AtariLike Pong (FPS = steps x frameskip 4), MujocoLike Ant
+(FPS = physics substeps, base 5)} × num_envs, random actions (paper §4.1).
+This container has 1 CPU core, so host-engine numbers play the paper's
+"Laptop" column role; the device engine is the TPU-native contribution.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def fps_unit(task: str) -> str:
+    return "frames" if "Pong" in task else "physics-steps"
+
+
+def bench_device(task: str, num_envs: int, batch_size: int, mode: str,
+                 steps: int = 60, iters: int = 3) -> float:
+    import jax
+
+    from repro.core.device_pool import DeviceEnvPool
+    from repro.core.registry import _jax_env
+    from repro.core.xla_loop import build_random_collect_fn
+
+    env = _jax_env(task)
+    pool = DeviceEnvPool(env, num_envs, batch_size, mode=mode)
+    collect = build_random_collect_fn(pool, num_steps=steps)
+    ps, ts = pool.reset(jax.random.PRNGKey(0))
+    ps, ts, traj, _ = collect(ps, None, ts, jax.random.PRNGKey(1))
+    jax.block_until_ready(traj.reward)
+    frames = 0.0
+    t0 = time.time()
+    for i in range(iters):
+        ps, ts, traj, _ = collect(ps, None, ts, jax.random.PRNGKey(2 + i))
+        frames += float(traj.step_cost.sum())
+    jax.block_until_ready(traj.reward)
+    return frames / (time.time() - t0)
+
+
+def bench_host(task: str, engine: str, num_envs: int, batch_size: int | None,
+               steps: int = 30, num_threads: int | None = None) -> float:
+    import repro
+
+    pool = repro.make(task, engine=engine, num_envs=num_envs,
+                      batch_size=batch_size, num_threads=num_threads)
+    rng = np.random.default_rng(0)
+    spec = pool.spec
+    try:
+        if hasattr(pool, "async_reset"):
+            pool.async_reset()
+            out = pool.recv()
+        else:
+            out = pool.reset()
+        M = getattr(pool, "batch_size", num_envs)
+        # warmup
+        for _ in range(3):
+            acts = spec.act_spec.sample(rng, (M,))
+            out = pool.step(acts, out["env_id"])
+        frames = 0.0
+        t0 = time.time()
+        for _ in range(steps):
+            acts = spec.act_spec.sample(rng, (M,))
+            out = pool.step(acts, out["env_id"])
+            frames += float(np.sum(out["step_cost"]))
+        dt = time.time() - t0
+        return frames / dt
+    finally:
+        pool.close() if hasattr(pool, "close") else None
+
+
+def run(csv_rows: list[str]) -> None:
+    tasks = ["Pong-v5", "Ant-v3"]
+    for task in tasks:
+        rows = []
+        # host engines (paper Table 1 baselines)
+        for engine, n, m in [("forloop", 8, None), ("thread", 8, 8),
+                             ("thread", 16, 8)]:
+            tag = f"{engine}{'-async' if m and m < n else ''}"
+            try:
+                fps = bench_host(task, engine, n, m)
+                rows.append((f"{tag}_N{n}", fps))
+            except Exception as e:  # pragma: no cover
+                rows.append((f"{tag}_N{n}", float("nan")))
+        # device engines
+        for mode, n, m in [("sync", 64, 64), ("async", 64, 32),
+                           ("async", 128, 32), ("masked", 64, 32)]:
+            fps = bench_device(task, n, m, mode)
+            rows.append((f"device-{mode}_N{n}_M{m}", fps))
+        best = max(r[1] for r in rows if np.isfinite(r[1]))
+        for name, fps in rows:
+            csv_rows.append(
+                f"throughput_{task}_{name},{1e6/max(fps,1e-9):.3f},"
+                f"{fps:.0f} {fps_unit(task)}/s"
+            )
+        csv_rows.append(
+            f"throughput_{task}_BEST,{1e6/best:.3f},{best:.0f} {fps_unit(task)}/s"
+        )
+
+
+if __name__ == "__main__":
+    rows: list[str] = []
+    run(rows)
+    print("\n".join(rows))

@@ -1,0 +1,109 @@
+"""Sweep driver: run every (arch × shape × mesh) dry-run cell in a fresh
+subprocess (512 host devices are per-process state) and collect JSONs into
+results/dryrun/.
+
+Usage:
+  PYTHONPATH=src python benchmarks/dryrun_sweep.py [--mesh single|multi|both]
+      [--arch A ...] [--shape S ...] [--timeout 3600] [--rules baseline]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT = os.path.join(ROOT, "results", "dryrun")
+
+ARCHS = [
+    "qwen3-14b", "llama3.2-3b", "starcoder2-3b", "qwen3-0.6b", "hymba-1.5b",
+    "dbrx-132b", "granite-moe-3b-a800m", "whisper-large-v3", "qwen2-vl-72b",
+    "xlstm-125m",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def run_one(arch: str, shape: str, multi: bool, rules: str, timeout: int,
+            overrides: list[str]) -> dict:
+    mesh = "multi" if multi else "single"
+    tag = f"{arch}__{shape}__{mesh}__{rules}"
+    out_json = os.path.join(OUT, tag + ".json")
+    if os.path.exists(out_json):
+        with open(out_json) as f:
+            prev = json.load(f)
+        if prev.get("status") in ("ok", "skipped"):
+            print(f"[skip-cached] {tag}", flush=True)
+            return prev
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", arch, "--shape", shape, "--rules", rules,
+        "--json", out_json,
+    ]
+    if multi:
+        cmd.append("--multi-pod")
+    for ov in overrides:
+        cmd += ["--override", ov]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    t0 = time.time()
+    try:
+        proc = subprocess.run(
+            cmd, capture_output=True, text=True, timeout=timeout, env=env,
+        )
+        dt = time.time() - t0
+        if proc.returncode == 0 and os.path.exists(out_json):
+            with open(out_json) as f:
+                res = json.load(f)
+            print(f"[{res['status']:7s}] {tag}  ({dt:.0f}s)", flush=True)
+            return res
+        res = {"arch": arch, "shape": shape, "mesh": mesh, "rules": rules,
+               "status": "failed", "stderr": proc.stderr[-3000:],
+               "elapsed_s": dt}
+    except subprocess.TimeoutExpired:
+        res = {"arch": arch, "shape": shape, "mesh": mesh, "rules": rules,
+               "status": "timeout", "elapsed_s": timeout}
+    with open(out_json, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"[{res['status']:7s}] {tag}", flush=True)
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--arch", nargs="*", default=ARCHS)
+    ap.add_argument("--shape", nargs="*", default=SHAPES)
+    ap.add_argument("--rules", default="baseline")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--override", action="append", default=[])
+    args = ap.parse_args()
+
+    os.makedirs(OUT, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    results = []
+    t0 = time.time()
+    # cheapest first so failures surface early
+    order = sorted(
+        [(a, s) for a in args.arch for s in args.shape],
+        key=lambda x: (ARCHS.index(x[0]) if x[0] in ARCHS else 99),
+    )
+    for multi in meshes:
+        for arch, shape in order:
+            results.append(run_one(arch, shape, multi, args.rules,
+                                   args.timeout, args.override))
+    ok = sum(r["status"] == "ok" for r in results)
+    sk = sum(r["status"] == "skipped" for r in results)
+    bad = [r for r in results if r["status"] not in ("ok", "skipped")]
+    print(f"\n=== sweep done in {time.time()-t0:.0f}s: "
+          f"{ok} ok, {sk} skipped, {len(bad)} failed ===")
+    for r in bad:
+        print(" FAILED:", r["arch"], r["shape"], r.get("mesh"),
+              r.get("stderr", "")[-500:])
+
+
+if __name__ == "__main__":
+    main()

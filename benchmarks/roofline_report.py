@@ -1,0 +1,80 @@
+"""Render the §Dry-run / §Roofline tables from results/dryrun/*.json."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT = os.path.join(ROOT, "results", "dryrun")
+
+ARCH_ORDER = [
+    "qwen3-14b", "llama3.2-3b", "starcoder2-3b", "qwen3-0.6b", "hymba-1.5b",
+    "dbrx-132b", "granite-moe-3b-a800m", "whisper-large-v3", "qwen2-vl-72b",
+    "xlstm-125m",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-4:
+        return f"{x*1e6:.1f}µs"
+    if x < 0.1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.3f}s"
+
+
+def fmt_b(x: float) -> str:
+    for unit, div in (("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(mesh: str = "single", rules: str = "baseline") -> dict:
+    cells = {}
+    for f in glob.glob(os.path.join(OUT, f"*__{mesh}__{rules}.json")):
+        with open(f) as fh:
+            r = json.load(fh)
+        cells[(r["arch"], r["shape"])] = r
+    return cells
+
+
+def main() -> None:
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    rules = sys.argv[2] if len(sys.argv) > 2 else "baseline"
+    cells = load(mesh, rules)
+    hdr = (f"| arch | shape | status | mem/dev | C (s) | M (s) | X (s) | dom | "
+           f"MODEL_FLOPs | useful | MFU-bound |")
+    print(hdr)
+    print("|" + "---|" * 11)
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = cells.get((arch, shape))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                print(f"| {arch} | {shape} | SKIP ({r['reason'][:40]}…) "
+                      f"| — | — | — | — | — | — | — | — |")
+                continue
+            if r["status"] != "ok":
+                print(f"| {arch} | {shape} | {r['status'].upper()} | — | — | — "
+                      f"| — | — | — | — | — |")
+                continue
+            rf = r["roofline"]
+            mem = r["memory_analysis"].get("total_per_device", 0)
+            print(
+                f"| {arch} | {shape} | ok | {fmt_b(mem)} "
+                f"| {fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} "
+                f"| {fmt_s(rf['collective_s'])} | {rf['dominant'][:4]} "
+                f"| {rf['model_flops']:.2e} | {rf['useful_flop_frac']:.2f} "
+                f"| {rf['mfu_bound']*100:.1f}% |"
+            )
+
+
+if __name__ == "__main__":
+    main()

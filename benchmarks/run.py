@@ -1,0 +1,49 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (harness contract).
+
+  PYTHONPATH=src python -m benchmarks.run [--only single_env,throughput,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+SECTIONS = [
+    ("single_env", "benchmarks.bench_single_env", "paper Table 2 / App. C"),
+    ("throughput", "benchmarks.bench_throughput", "paper Table 1 / Fig. 3"),
+    ("xla_loop", "benchmarks.bench_xla_loop", "paper Appendix E"),
+    ("kernels", "benchmarks.bench_kernels", "Pallas kernels vs ref"),
+    ("ppo_profile", "benchmarks.bench_ppo_profile", "paper Figure 4"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list of sections to run")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    rows: list[str] = ["name,us_per_call,derived"]
+    for name, module, what in SECTIONS:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name}: {what} ---", file=sys.stderr, flush=True)
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run(rows)
+            print(f"#     done in {time.time()-t0:.0f}s", file=sys.stderr,
+                  flush=True)
+        except Exception as e:  # keep the harness alive
+            rows.append(f"{name}_SECTION_FAILED,0,{type(e).__name__}: {e}")
+            print(f"#     FAILED: {e}", file=sys.stderr, flush=True)
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main()

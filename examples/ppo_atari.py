@@ -1,0 +1,58 @@
+"""End-to-end PPO on the Atari-like env (paper §4.2 / Figure 6).
+
+Default settings mirror the paper's CleanRL Atari config (Table 3, N=8);
+``--tuned`` switches to the high-throughput Figure-6 settings (N=64,
+larger batch, fewer epochs) that trade sample efficiency for wall-clock.
+
+    PYTHONPATH=src python examples/ppo_atari.py --total-steps 100000
+"""
+
+import argparse
+import json
+
+import jax
+
+from repro.core.device_pool import DeviceEnvPool
+from repro.core.registry import _jax_env
+from repro.rl.ppo import PPOConfig, train_device
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", default="Pong-v5")
+    ap.add_argument("--total-steps", type=int, default=100_000)
+    ap.add_argument("--num-envs", type=int, default=8)
+    ap.add_argument("--batch-size", type=int, default=None)
+    ap.add_argument("--tuned", action="store_true",
+                    help="paper Fig.6 high-throughput settings (N=64)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out-json", default=None)
+    args = ap.parse_args()
+
+    if args.tuned:
+        num_envs, batch = 64, 64
+        cfg = PPOConfig(total_steps=args.total_steps, num_steps=128,
+                        minibatches=4, epochs=2, lr=8e-4, ent_coef=0.01,
+                        vf_clip=False)
+    else:
+        num_envs = args.num_envs
+        batch = args.batch_size or num_envs
+        cfg = PPOConfig(total_steps=args.total_steps, num_steps=128,
+                        minibatches=4, epochs=4, lr=2.5e-4)
+
+    env = _jax_env(args.task)
+    mode = "sync" if batch == num_envs else "async"
+    pool = DeviceEnvPool(env, num_envs, batch, mode=mode)
+
+    def log(rec):
+        print(json.dumps({k: (round(v, 3) if isinstance(v, float) else v)
+                          for k, v in rec.items()}), flush=True)
+
+    state, net, hist = train_device(pool, cfg, seed=args.seed, log_fn=log)
+    if args.out_json:
+        with open(args.out_json, "w") as f:
+            json.dump(hist, f)
+
+
+if __name__ == "__main__":
+    main()

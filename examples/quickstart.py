@@ -1,0 +1,39 @@
+"""Quickstart: the EnvPool API, as in paper §1 / Appendix A.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import numpy as np
+
+import repro
+
+# ---- synchronous mode (paper A.1): gym-style -------------------------- #
+env = repro.make("Pong-v5", num_envs=16)          # device pool, sync
+ps, ts = env.reset(jax.random.PRNGKey(0))
+print("reset obs:", jax.tree.leaves(ts.obs)[0].shape)   # (16, 4, 84, 84)
+
+act = np.zeros(16, dtype=np.int32)
+ps, ts = env.step(ps, act, ts.env_id)
+print("step reward:", np.asarray(ts.reward)[:4], "env_id:", np.asarray(ts.env_id)[:4])
+
+# ---- asynchronous mode (paper A.3): recv/send ------------------------- #
+env = repro.make("Pong-v5", num_envs=16, batch_size=8)  # async: M < N
+handle, recv, send, step = env.xla()                    # paper Appendix E
+ps, ts = recv(handle)                                    # first 8 finishers
+for i in range(20):
+    action = env.env.sample_actions(jax.random.PRNGKey(i), 8)
+    ps = send(ps, action, ts.env_id)
+    ps, ts = recv(ps)
+print("async env_ids:", np.asarray(ts.env_id))
+print("mean step cost (frames):", float(ts.step_cost.mean()))
+
+# ---- host thread pool (the paper-faithful C++-style engine) ------------ #
+tp = repro.make("CartPole-v1", engine="thread", num_envs=8, batch_size=4)
+tp.async_reset()
+out = tp.recv()
+for _ in range(10):
+    out = tp.step(np.random.randint(0, 2, size=4), out["env_id"])
+print("thread pool batch:", out["obs"].shape, "ids:", out["env_id"])
+tp.close()
+print("OK")

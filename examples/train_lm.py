@@ -1,0 +1,48 @@
+"""End-to-end LM training driver (deliverable b): trains a Markov-synthetic
+corpus on any --arch at a configurable scale, with checkpoints.
+
+The default "--preset demo" (~10M params) visibly learns on this CPU
+container in ~2 minutes; "--preset 100m" is the ~100M-param configuration
+(same code path; budget-bound on CPU, native on TPU).
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen3-0.6b --preset demo
+"""
+
+import argparse
+import subprocess
+import sys
+import os
+
+PRESETS = {
+    # d_model, layers, steps, batch, seq
+    "smoke": dict(d=64, layers=2, steps=30, batch=4, seq=64),
+    "demo": dict(d=256, layers=4, steps=300, batch=8, seq=128),
+    "100m": dict(d=768, layers=12, steps=300, batch=8, seq=512),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--preset", default="demo", choices=sorted(PRESETS))
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", args.arch, "--smoke",
+        "--d-model", str(p["d"]), "--layers", str(p["layers"]),
+        "--steps", str(p["steps"]), "--batch", str(p["batch"]),
+        "--seq", str(p["seq"]), "--lr", "1e-3",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+        "--log-every", "20",
+    ]
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    raise SystemExit(subprocess.call(cmd, env=env))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""repro: EnvPool (NeurIPS 2022) rebuilt as a TPU-native JAX framework.
+
+Package import is LAZY: importing ``repro`` (or ``repro.launch``) must not
+import jax, so that ``repro.launch.dryrun`` can set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` in its first two
+lines before jax locks the device count (jax>=0.8 parses XLA_FLAGS at
+import time).
+"""
+
+__version__ = "0.1.0"
+
+
+def __getattr__(name):
+    if name in ("make", "make_py"):
+        from repro import core
+
+        return getattr(core, name)
+    raise AttributeError(name)

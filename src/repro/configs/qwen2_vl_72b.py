@@ -1,0 +1,14 @@
+"""qwen2-vl-72b [vlm] — M-RoPE (t/h/w sections), dynamic-resolution vision
+frontend STUB (input_specs supplies patch embeddings). [arXiv:2409.12191; hf]"""
+from repro.models.common import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-72b", family="vlm",
+        n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+        d_ff=29568, vocab=152064, head_dim=128,
+        mlp_type="swiglu", norm_type="rmsnorm",
+        rope_theta=1_000_000.0, rope_type="mrope", mrope_sections=(16, 24, 24),
+        frontend="vision",
+    )

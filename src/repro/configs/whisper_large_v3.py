@@ -1,0 +1,14 @@
+"""whisper-large-v3 [audio] — enc-dec, MHA (kv=20), conv frontend STUB
+(input_specs supplies (B,1500,1280) frame embeddings). [arXiv:2212.04356]"""
+from repro.models.common import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3", family="encdec",
+        n_layers=32, d_model=1280, n_heads=20, n_kv_heads=20,
+        d_ff=5120, vocab=51866, head_dim=64,
+        mlp_type="gelu", norm_type="layernorm", rope_type="none",
+        enc_layers=32, enc_seq=1500, frontend="audio",
+        max_seq=32768 + 8,
+    )

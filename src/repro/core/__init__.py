@@ -1,0 +1,24 @@
+# The paper's primary contribution: the EnvPool execution engine,
+# re-built TPU-native in JAX (DESIGN.md §2).
+from repro.core.device_pool import DeviceEnvPool, PoolState, make_pool
+from repro.core.registry import list_envs, make, make_py, register, register_py
+from repro.core.specs import ArraySpec, EnvSpec, TimeStep
+from repro.core.dm_api import DmEnv
+from repro.core.xla_loop import build_collect_fn, build_random_collect_fn
+
+__all__ = [
+    "ArraySpec",
+    "DeviceEnvPool",
+    "DmEnv",
+    "EnvSpec",
+    "PoolState",
+    "TimeStep",
+    "build_collect_fn",
+    "build_random_collect_fn",
+    "list_envs",
+    "make",
+    "make_pool",
+    "make_py",
+    "register",
+    "register_py",
+]

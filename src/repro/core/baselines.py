@@ -1,0 +1,189 @@
+"""Baseline executors from the paper's Table 1: For-loop and Subprocess.
+
+* ``ForLoopEnv`` — all envs stepped sequentially in the caller's thread.
+* ``SubprocessEnv`` — gym.vector-style: worker processes step their env
+  shard and write observations into shared memory; the parent coordinates
+  over pipes.  This is the "most popular implementation" the paper
+  benchmarks against (Brockman et al. 2016).
+
+Both are synchronous (M = N) and return the same dict layout as
+ThreadEnvPool.recv for drop-in benchmarking.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import pickle
+from multiprocessing import shared_memory
+from typing import Callable
+
+import numpy as np
+
+from repro.core.host_pool import HostEnv
+
+
+def _result_dict(n, obs_spec):
+    return {
+        "obs": np.zeros((n,) + obs_spec.shape, obs_spec.dtype),
+        "reward": np.zeros((n,), np.float32),
+        "done": np.zeros((n,), np.bool_),
+        "terminated": np.zeros((n,), np.bool_),
+        "truncated": np.zeros((n,), np.bool_),
+        "env_id": np.arange(n, dtype=np.int32),
+        "episode_return": np.zeros((n,), np.float32),
+        "episode_length": np.zeros((n,), np.int32),
+        "step_cost": np.ones((n,), np.int32),
+    }
+
+
+class ForLoopEnv:
+    """Paper Table 1 row 1: single-thread sequential stepping."""
+
+    def __init__(self, env_fns: list[Callable[[], HostEnv]]):
+        self._envs = [fn() for fn in env_fns]
+        self.num_envs = len(self._envs)
+        self.batch_size = self.num_envs
+        self.spec = self._envs[0].spec
+
+    def reset(self) -> dict[str, np.ndarray]:
+        out = _result_dict(self.num_envs, self.spec.obs_spec)
+        for i, e in enumerate(self._envs):
+            out["obs"][i] = e.reset()
+        return out
+
+    def step(self, actions, env_ids=None) -> dict[str, np.ndarray]:
+        out = _result_dict(self.num_envs, self.spec.obs_spec)
+        for i, e in enumerate(self._envs):
+            obs, rew, done, info = e.step(actions[i])
+            out["obs"][i] = obs
+            out["reward"][i] = rew
+            out["done"][i] = done
+            out["terminated"][i] = info.get("terminated", done)
+            out["truncated"][i] = info.get("truncated", False)
+            out["episode_return"][i] = info.get("episode_return", 0.0)
+            out["episode_length"][i] = info.get("episode_length", 0)
+            out["step_cost"][i] = info.get("step_cost", 1)
+        return out
+
+    def close(self) -> None:
+        pass
+
+
+def _subproc_worker(conn, shm_name, shape, dtype_str, lo, hi, factory_bytes):
+    """Worker process: owns envs [lo, hi); writes obs into shared memory."""
+    factory = pickle.loads(factory_bytes)
+    envs = [factory(i) for i in range(lo, hi)]
+    shm = shared_memory.SharedMemory(name=shm_name)
+    obs_block = np.ndarray(shape, dtype=np.dtype(dtype_str), buffer=shm.buf)
+    try:
+        while True:
+            cmd, payload = conn.recv()
+            if cmd == "close":
+                break
+            if cmd == "reset":
+                for i, e in enumerate(envs):
+                    obs_block[lo + i] = e.reset()
+                conn.send(("ok", None))
+            elif cmd == "step":
+                actions = payload
+                rews, dones = [], []
+                for i, e in enumerate(envs):
+                    obs, rew, done, _ = e.step(actions[i])
+                    obs_block[lo + i] = obs  # one IPC copy saved vs pipe
+                    rews.append(rew)
+                    dones.append(done)
+                conn.send(("ok", (rews, dones)))
+    finally:
+        shm.close()
+        conn.close()
+
+
+class SubprocessEnv:
+    """Paper Table 1 row 2: multiprocessing with shared-memory obs."""
+
+    def __init__(
+        self,
+        env_factory: Callable[[int], HostEnv],
+        num_envs: int,
+        num_workers: int | None = None,
+        spec=None,
+    ):
+        self.num_envs = num_envs
+        self.batch_size = num_envs
+        if spec is None:
+            probe = env_factory(0)
+            spec = probe.spec
+            del probe
+        self.spec = spec
+
+        ctx = mp.get_context("spawn")  # fork is unsafe with an XLA runtime
+        self.num_workers = min(num_workers or num_envs, num_envs)
+        obs_spec = spec.obs_spec
+        shape = (num_envs,) + obs_spec.shape
+        nbytes = int(np.prod(shape)) * np.dtype(obs_spec.dtype).itemsize
+        self._shm = shared_memory.SharedMemory(create=True, size=max(nbytes, 1))
+        self._obs = np.ndarray(shape, dtype=obs_spec.dtype, buffer=self._shm.buf)
+
+        factory_bytes = pickle.dumps(env_factory)
+        bounds = np.linspace(0, num_envs, self.num_workers + 1).astype(int)
+        self._conns, self._procs, self._bounds = [], [], []
+        for w in range(self.num_workers):
+            lo, hi = int(bounds[w]), int(bounds[w + 1])
+            if lo == hi:
+                continue
+            parent, child = ctx.Pipe()
+            p = ctx.Process(
+                target=_subproc_worker,
+                args=(child, self._shm.name, shape, np.dtype(obs_spec.dtype).str,
+                      lo, hi, factory_bytes),
+                daemon=True,
+            )
+            p.start()
+            child.close()
+            self._conns.append(parent)
+            self._procs.append(p)
+            self._bounds.append((lo, hi))
+        self._closed = False
+
+    def reset(self) -> dict[str, np.ndarray]:
+        for c in self._conns:
+            c.send(("reset", None))
+        for c in self._conns:
+            c.recv()
+        out = _result_dict(self.num_envs, self.spec.obs_spec)
+        out["obs"][:] = self._obs  # batching copy (the paper counts this)
+        return out
+
+    def step(self, actions, env_ids=None) -> dict[str, np.ndarray]:
+        for c, (lo, hi) in zip(self._conns, self._bounds):
+            c.send(("step", actions[lo:hi]))
+        out = _result_dict(self.num_envs, self.spec.obs_spec)
+        for c, (lo, hi) in zip(self._conns, self._bounds):
+            _, (rews, dones) = c.recv()
+            out["reward"][lo:hi] = rews
+            out["done"][lo:hi] = dones
+        out["obs"][:] = self._obs
+        return out
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for c in self._conns:
+            try:
+                c.send(("close", None))
+                c.close()
+            except Exception:
+                pass
+        for p in self._procs:
+            p.join(timeout=5.0)
+            if p.is_alive():
+                p.terminate()
+        self._shm.close()
+        self._shm.unlink()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass

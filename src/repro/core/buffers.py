@@ -1,0 +1,116 @@
+"""Host-side ActionBufferQueue and StateBufferQueue (paper Appendix D).
+
+Faithful ports of EnvPool's two queues.  The C++ originals are lock-free
+via std::atomic; CPython has no such primitive, so the *structure* is kept
+(pre-allocated circular storage, semaphore signaling, slot acquisition via
+monotonic counters — ``itertools.count`` whose ``next()`` is atomic under
+the GIL) while a mutex guards the few compound updates.  What matters for
+the engine comparison is what the paper highlights: **zero-copy batching**
+— workers write observations straight into the pre-allocated output block
+and ownership of a full block transfers to the consumer without a copy.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Any
+
+import numpy as np
+
+
+class ActionBufferQueue:
+    """Pre-allocated circular queue of (env_id, action) work items.
+
+    Capacity 2N as in the paper (App. D.1): at most N outstanding actions
+    plus headroom; two monotonic counters track head/tail, a semaphore
+    coordinates producers/consumers.
+    """
+
+    def __init__(self, num_envs: int):
+        self._capacity = 2 * num_envs
+        self._buf: list[Any] = [None] * self._capacity
+        self._head = itertools.count()   # dequeue positions
+        self._tail = itertools.count()   # enqueue positions
+        self._lock = threading.Lock()
+        self._sem = threading.Semaphore(0)
+
+    def put_batch(self, items: list[Any]) -> None:
+        with self._lock:
+            for item in items:
+                self._buf[next(self._tail) % self._capacity] = item
+        self._sem.release(len(items))
+
+    def get(self, timeout: float | None = None) -> Any:
+        if not self._sem.acquire(timeout=timeout):
+            raise TimeoutError("ActionBufferQueue.get timed out")
+        with self._lock:
+            idx = next(self._head) % self._capacity
+            item = self._buf[idx]
+            self._buf[idx] = None
+        return item
+
+
+class _Block:
+    """One StateBufferQueue block: batch_size pre-allocated slots."""
+
+    def __init__(self, fields: dict[str, tuple[tuple[int, ...], Any]], batch: int):
+        self._field_spec = fields
+        self.batch = batch
+        self.arrays: dict[str, np.ndarray] = {}
+        self.ready = threading.Event()
+        self._done = itertools.count()
+        self.alloc()
+
+    def alloc(self) -> None:
+        """(Re-)allocate slot storage. Called on recycle: ownership of the
+        previous arrays transferred to the consumer (paper App. D.2)."""
+        self.arrays = {
+            name: np.zeros((self.batch,) + shape, dtype)
+            for name, (shape, dtype) in self._field_spec.items()
+        }
+        self.ready.clear()
+        self._done = itertools.count()
+
+    def write(self, slot: int, values: dict[str, Any]) -> None:
+        for name, v in values.items():
+            self.arrays[name][slot] = v
+        if next(self._done) == self.batch - 1:
+            self.ready.set()
+
+
+class StateBufferQueue:
+    """Circular buffer of pre-allocated blocks (paper App. D.2).
+
+    Workers acquire slots first-come-first-served via a global monotonic
+    counter; slot ``k`` lands in block ``(k // M) % num_blocks`` at offset
+    ``k % M``.  A block whose M slots are written flips its ready event;
+    ``take()`` consumes blocks in allocation order and recycles them.
+    """
+
+    def __init__(
+        self,
+        fields: dict[str, tuple[tuple[int, ...], Any]],
+        batch_size: int,
+        num_envs: int,
+    ):
+        self.batch = batch_size
+        # enough blocks that N outstanding results can never wrap onto an
+        # unconsumed block
+        self.num_blocks = max(2, -(-num_envs // batch_size) + 1)
+        self._blocks = [_Block(fields, batch_size) for _ in range(self.num_blocks)]
+        self._alloc = itertools.count()
+        self._take_head = 0
+
+    def acquire_slot(self) -> tuple[_Block, int]:
+        k = next(self._alloc)
+        return self._blocks[(k // self.batch) % self.num_blocks], k % self.batch
+
+    def take(self, timeout: float | None = None) -> dict[str, np.ndarray]:
+        blk = self._blocks[self._take_head % self.num_blocks]
+        if not blk.ready.wait(timeout=timeout):
+            raise TimeoutError("StateBufferQueue.take timed out")
+        out = blk.arrays  # ownership transfer — no copy
+        blk.alloc()       # fresh storage for the recycled block
+        self._take_head += 1
+        return out

@@ -1,0 +1,330 @@
+"""DeviceEnvPool — the TPU-native EnvPool (DESIGN.md §2.1).
+
+EnvPool's C++ machinery is re-thought for a synchronous dataflow machine:
+
+  ThreadPool workers      -> vmap lanes over a structure-of-arrays pytree
+  ActionBufferQueue       -> pre-allocated (N, ...) action table, scatter on send
+  StateBufferQueue block  -> the (M, ...) output batch, one gather on recv
+  "recv waits for the     -> shortest-job-first top-M selection on the
+   first M finished"         data-dependent step_cost; on a synchronous
+                             machine, waiting IS computing, so "wait for
+                             the first M" becomes "compute only the M
+                             that would finish first"
+  sync mode (M == N)      -> step every lane; vmapped while_loop pads all
+                             lanes to the batch max cost (paper Fig. 2a)
+
+Three execution modes:
+  * ``sync``   — step all N each recv (gym.vector semantics, M = N).
+  * ``async``  — top-M shortest-job-first gather/step/scatter (the paper's
+                 default mode; M < N hides the long tail).
+  * ``masked`` — event-driven ablation: every tick advances all busy lanes
+                 one substep; recv loops ticks until M results are ready.
+                 Literal EnvPool semantics, but idle lanes burn compute.
+
+All methods are pure functions over ``PoolState`` → the whole pool is
+jittable and usable inside ``lax.scan`` (paper Appendix E's ``env.xla()``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.specs import EnvSpec, TimeStep
+from repro.envs.base import Environment
+from repro.utils.pytree import pytree_dataclass, tree_gather
+
+# phases
+WAITING_ACTION = 0   # result consumed; agent owes us an action
+HAS_ACTION = 1       # action stored; step not yet executed
+READY = 2            # unconsumed result available
+
+_BIG = jnp.float32(1e9)
+
+
+@pytree_dataclass
+class PoolState:
+    env_states: Any            # pytree, leading dim N
+    phase: jnp.ndarray         # (N,) int32
+    actions: jnp.ndarray       # (N, *act_shape) action table
+    cost: jnp.ndarray          # (N,) int32 predicted cost of pending step
+    send_tick: jnp.ndarray     # (N,) int32 tick when action was enqueued
+    progress: jnp.ndarray      # (N,) int32 substeps done (masked mode)
+    # stored results for READY envs (obs always re-derived from env state)
+    r_reward: jnp.ndarray
+    r_done: jnp.ndarray
+    r_term: jnp.ndarray
+    r_trunc: jnp.ndarray
+    r_ep_return: jnp.ndarray
+    r_ep_length: jnp.ndarray
+    r_cost: jnp.ndarray
+    tick: jnp.ndarray          # int32 global recv counter
+    rng: jax.Array
+
+
+class DeviceEnvPool:
+    """EnvPool with ``num_envs`` N and ``batch_size`` M (paper §3.2).
+
+    ``batch_size == num_envs`` is synchronous mode; smaller is async.
+    """
+
+    def __init__(
+        self,
+        env: Environment,
+        num_envs: int,
+        batch_size: int | None = None,
+        mode: str = "async",
+        aging: float = 1.0,
+    ):
+        if batch_size is None:
+            batch_size = num_envs
+        if batch_size > num_envs:
+            raise ValueError("batch_size cannot exceed num_envs (paper §3.2)")
+        if mode not in ("sync", "async", "masked"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if mode == "sync" and batch_size != num_envs:
+            raise ValueError("sync mode requires batch_size == num_envs")
+        self.env = env
+        self.spec = env.spec
+        self.num_envs = int(num_envs)
+        self.batch_size = int(batch_size)
+        self.mode = mode
+        # aging makes queue-time lower effective priority -> no starvation
+        # (the FIFO-ness of the real StateBufferQueue, recovered softly)
+        self.aging = float(aging)
+
+    # ------------------------------------------------------------------ #
+    # construction / reset
+    # ------------------------------------------------------------------ #
+    def init(self, key: jax.Array) -> PoolState:
+        """async_reset (paper A.3): every env resets; all N results READY."""
+        rng, sub = jax.random.split(key)
+        keys = jax.random.split(sub, self.num_envs)
+        env_states = jax.vmap(self.env.init_state)(keys)
+        N = self.num_envs
+        act = self.spec.act_spec
+        return PoolState(
+            env_states=env_states,
+            phase=jnp.full((N,), READY, jnp.int32),
+            actions=jnp.zeros((N,) + act.shape, act.dtype),
+            cost=jnp.zeros((N,), jnp.int32),
+            send_tick=jnp.zeros((N,), jnp.int32),
+            progress=jnp.zeros((N,), jnp.int32),
+            r_reward=jnp.zeros((N,), jnp.float32),
+            r_done=jnp.zeros((N,), jnp.bool_),
+            r_term=jnp.zeros((N,), jnp.bool_),
+            r_trunc=jnp.zeros((N,), jnp.bool_),
+            r_ep_return=jnp.zeros((N,), jnp.float32),
+            r_ep_length=jnp.zeros((N,), jnp.int32),
+            r_cost=jnp.zeros((N,), jnp.int32),
+            tick=jnp.int32(0),
+            rng=rng,
+        )
+
+    # ------------------------------------------------------------------ #
+    # send — ActionBufferQueue enqueue
+    # ------------------------------------------------------------------ #
+    def send(self, ps: PoolState, actions: jnp.ndarray, env_ids: jnp.ndarray
+             ) -> PoolState:
+        """Store actions for ``env_ids``; returns immediately (paper §3.1)."""
+        env_ids = env_ids.astype(jnp.int32)
+        sel_states = tree_gather(ps.env_states, env_ids)
+        costs = jax.vmap(self.env.step_cost)(sel_states, actions)
+        costs = jnp.clip(costs, self.spec.min_cost, self.spec.max_cost)
+        return ps.replace(
+            actions=ps.actions.at[env_ids].set(actions.astype(ps.actions.dtype)),
+            phase=ps.phase.at[env_ids].set(HAS_ACTION),
+            cost=ps.cost.at[env_ids].set(costs.astype(jnp.int32)),
+            send_tick=ps.send_tick.at[env_ids].set(ps.tick),
+            progress=ps.progress.at[env_ids].set(0),
+        )
+
+    # ------------------------------------------------------------------ #
+    # recv — StateBufferQueue block of M results
+    # ------------------------------------------------------------------ #
+    def recv(self, ps: PoolState) -> tuple[PoolState, TimeStep]:
+        if self.mode == "masked":
+            return self._recv_masked(ps)
+        return self._recv_topm(ps)
+
+    def _priority(self, ps: PoolState) -> jnp.ndarray:
+        """Lower = served earlier. READY first (completion order ~ FIFO),
+        then HAS_ACTION by predicted cost minus queue age (SJF + aging),
+        WAITING last (should never be selected in a well-formed loop)."""
+        age = (ps.tick - ps.send_tick).astype(jnp.float32)
+        ready_p = -_BIG + ps.send_tick.astype(jnp.float32)
+        has_p = ps.cost.astype(jnp.float32) - self.aging * age
+        wait_p = _BIG
+        return jnp.where(
+            ps.phase == READY,
+            ready_p,
+            jnp.where(ps.phase == HAS_ACTION, has_p, wait_p),
+        )
+
+    def _recv_topm(self, ps: PoolState) -> tuple[PoolState, TimeStep]:
+        M = self.batch_size
+        _, idx = lax.top_k(-self._priority(ps), M)
+        idx = idx.astype(jnp.int32)
+
+        sel_states = tree_gather(ps.env_states, idx)
+        sel_actions = ps.actions[idx]
+        sel_phase = ps.phase[idx]
+        need_step = sel_phase == HAS_ACTION
+
+        new_states, ts = self.env.v_step(sel_states, sel_actions, need_step)
+
+        # merge with stored results for lanes that were READY
+        out = TimeStep(
+            obs=jax.tree.map(lambda x: x, ts.obs),
+            reward=jnp.where(need_step, ts.reward, ps.r_reward[idx]),
+            done=jnp.where(need_step, ts.done, ps.r_done[idx]),
+            terminated=jnp.where(need_step, ts.terminated, ps.r_term[idx]),
+            truncated=jnp.where(need_step, ts.truncated, ps.r_trunc[idx]),
+            env_id=idx,
+            episode_return=jnp.where(
+                need_step, ts.episode_return, ps.r_ep_return[idx]
+            ),
+            episode_length=jnp.where(
+                need_step, ts.episode_length, ps.r_ep_length[idx]
+            ),
+            step_cost=jnp.where(need_step, ts.step_cost, ps.r_cost[idx]),
+        )
+        env_states = jax.tree.map(
+            lambda full, upd: full.at[idx].set(upd), ps.env_states, new_states
+        )
+        ps = ps.replace(
+            env_states=env_states,
+            phase=ps.phase.at[idx].set(WAITING_ACTION),
+            r_reward=ps.r_reward.at[idx].set(out.reward),
+            r_done=ps.r_done.at[idx].set(out.done),
+            r_term=ps.r_term.at[idx].set(out.terminated),
+            r_trunc=ps.r_trunc.at[idx].set(out.truncated),
+            r_ep_return=ps.r_ep_return.at[idx].set(out.episode_return),
+            r_ep_length=ps.r_ep_length.at[idx].set(out.episode_length),
+            r_cost=ps.r_cost.at[idx].set(out.step_cost),
+            tick=ps.tick + 1,
+        )
+        return ps, out
+
+    # ------------------------------------------------------------------ #
+    # masked (event-driven tick) mode — the literal-semantics ablation
+    # ------------------------------------------------------------------ #
+    def _tick(self, ps: PoolState) -> PoolState:
+        """Advance every HAS_ACTION lane one substep (idle lanes masked)."""
+        busy = ps.phase == HAS_ACTION
+        starting = busy & (ps.progress == 0)
+        # clear accumulators at the start of a step
+        pre = jax.vmap(self.env.pre_step)(ps.env_states)
+        states = jax.tree.map(
+            lambda p, s: jnp.where(
+                starting.reshape(starting.shape + (1,) * (p.ndim - 1)), p, s
+            ),
+            pre,
+            ps.env_states,
+        )
+        stepped = self.env.v_substep(states, ps.actions)
+        running = busy & (ps.progress < ps.cost)
+        states = jax.tree.map(
+            lambda n, o: jnp.where(
+                running.reshape(running.shape + (1,) * (n.ndim - 1)), n, o
+            ),
+            stepped,
+            states,
+        )
+        progress = jnp.where(running, ps.progress + 1, ps.progress)
+        finished = busy & (progress >= ps.cost)
+
+        fin_states, fin_ts = self.env.v_finalize(states, ps.cost)
+        states = jax.tree.map(
+            lambda f, s: jnp.where(
+                finished.reshape(finished.shape + (1,) * (f.ndim - 1)), f, s
+            ),
+            fin_states,
+            states,
+        )
+        return ps.replace(
+            env_states=states,
+            progress=progress,
+            phase=jnp.where(finished, READY, ps.phase),
+            send_tick=jnp.where(finished, ps.tick, ps.send_tick),
+            r_reward=jnp.where(finished, fin_ts.reward, ps.r_reward),
+            r_done=jnp.where(finished, fin_ts.done, ps.r_done),
+            r_term=jnp.where(finished, fin_ts.terminated, ps.r_term),
+            r_trunc=jnp.where(finished, fin_ts.truncated, ps.r_trunc),
+            r_ep_return=jnp.where(finished, fin_ts.episode_return, ps.r_ep_return),
+            r_ep_length=jnp.where(finished, fin_ts.episode_length, ps.r_ep_length),
+            r_cost=jnp.where(finished, ps.cost, ps.r_cost),
+        )
+
+    def _recv_masked(self, ps: PoolState) -> tuple[PoolState, TimeStep]:
+        M = self.batch_size
+
+        def not_enough(s: PoolState):
+            return jnp.sum(s.phase == READY) < M
+
+        ps = lax.while_loop(not_enough, self._tick, ps)
+        # completion order ≈ send_tick order among READY
+        prio = jnp.where(
+            ps.phase == READY, ps.send_tick.astype(jnp.float32), _BIG
+        )
+        _, idx = lax.top_k(-prio, M)
+        idx = idx.astype(jnp.int32)
+        sel_states = tree_gather(ps.env_states, idx)
+        out = TimeStep(
+            obs=jax.vmap(self.env.observe)(sel_states),
+            reward=ps.r_reward[idx],
+            done=ps.r_done[idx],
+            terminated=ps.r_term[idx],
+            truncated=ps.r_trunc[idx],
+            env_id=idx,
+            episode_return=ps.r_ep_return[idx],
+            episode_length=ps.r_ep_length[idx],
+            step_cost=ps.r_cost[idx],
+        )
+        ps = ps.replace(
+            phase=ps.phase.at[idx].set(WAITING_ACTION), tick=ps.tick + 1
+        )
+        return ps, out
+
+    # ------------------------------------------------------------------ #
+    # gym-style combined step + reset views
+    # ------------------------------------------------------------------ #
+    def step(self, ps: PoolState, actions: jnp.ndarray, env_ids: jnp.ndarray
+             ) -> tuple[PoolState, TimeStep]:
+        """``step = send ∘ recv`` (paper §3.1)."""
+        return self.recv(self.send(ps, actions, env_ids))
+
+    def reset(self, key: jax.Array) -> tuple[PoolState, TimeStep]:
+        """Sync-style reset: init + drain the first batch of M results."""
+        ps = self.init(key)
+        return self.recv(ps)
+
+    # ------------------------------------------------------------------ #
+    # paper Appendix E: jittable handle API
+    # ------------------------------------------------------------------ #
+    def xla(self):
+        """Returns ``(handle, recv, send, step)`` — all jitted pure fns,
+        mirroring EnvPool's ``env.xla()`` (paper Appendix E)."""
+        handle = self.init(jax.random.PRNGKey(0))
+        recv = jax.jit(self.recv)
+        send = jax.jit(self.send)
+        step = jax.jit(self.step)
+        return handle, recv, send, step
+
+
+def make_pool(
+    env: Environment,
+    num_envs: int,
+    batch_size: int | None = None,
+    mode: str | None = None,
+) -> DeviceEnvPool:
+    """EnvPool constructor with the paper's mode convention: sync iff
+    batch_size in (None, num_envs)."""
+    if mode is None:
+        mode = "sync" if batch_size in (None, num_envs) else "async"
+    return DeviceEnvPool(env, num_envs, batch_size, mode=mode)

@@ -1,0 +1,72 @@
+"""DeepMind dm_env-style API (paper Appendix A.2).
+
+    env = repro.make("Pong-v5", num_envs=100)
+    dm = DmEnv(env)
+    ts = dm.reset(key)                 # ts.observation.obs, .observation.env_id
+    ts = dm.step(actions, env_id)      # .reward, .discount, .step_type
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.device_pool import DeviceEnvPool
+
+
+class DmObservation(NamedTuple):
+    obs: jnp.ndarray
+    env_id: jnp.ndarray
+
+
+class DmTimeStep(NamedTuple):
+    step_type: jnp.ndarray    # 0 FIRST, 1 MID, 2 LAST
+    reward: jnp.ndarray
+    discount: jnp.ndarray
+    observation: DmObservation
+
+    def first(self):
+        return self.step_type == 0
+
+    def last(self):
+        return self.step_type == 2
+
+
+def _convert(ts, gamma: float = 1.0) -> DmTimeStep:
+    step_type = jnp.where(
+        ts.done, 2, jnp.where(ts.episode_length == 0, 1, 1)
+    ).astype(jnp.int32)
+    # EnvPool autoreset: the obs after done is the next episode's FIRST
+    discount = jnp.where(ts.terminated, 0.0, gamma).astype(jnp.float32)
+    return DmTimeStep(
+        step_type=step_type,
+        reward=ts.reward,
+        discount=discount,
+        observation=DmObservation(obs=ts.obs, env_id=ts.env_id),
+    )
+
+
+class DmEnv:
+    """dm_env facade over a DeviceEnvPool (sync or async)."""
+
+    def __init__(self, pool: DeviceEnvPool, gamma: float = 1.0):
+        self.pool = pool
+        self.gamma = gamma
+        self._ps = None
+
+    def action_spec(self):
+        return self.pool.spec.act_spec
+
+    def observation_spec(self):
+        return self.pool.spec.obs_spec
+
+    def reset(self, key: jax.Array) -> DmTimeStep:
+        self._ps, ts = self.pool.reset(key)
+        out = _convert(ts, self.gamma)
+        return out._replace(step_type=jnp.zeros_like(out.step_type))
+
+    def step(self, actions, env_id) -> DmTimeStep:
+        self._ps, ts = self.pool.step(self._ps, actions, env_id)
+        return _convert(ts, self.gamma)

@@ -1,0 +1,196 @@
+"""ThreadEnvPool — the paper-faithful host engine (DESIGN.md §2, layer L1).
+
+A fixed pool of worker threads (paper §3.3) consumes (env_id, action) work
+items from the ActionBufferQueue, steps the environment, and writes results
+into pre-allocated StateBufferQueue blocks.  ``recv`` returns one block of
+``batch_size`` results — the first M environments to finish (paper §3.2).
+
+Environments here are *host* envs: objects with ``reset()``/``step(a)``.
+The "C++ environment" analogue is ``JittedHostEnv`` — a per-instance
+jit-compiled JAX env whose step releases the GIL while XLA executes, just
+as EnvPool's C++ envs release it inside pybind11 calls.  Pure-Python
+NumPy envs (``envs/host_numpy.py``) play the role of the original Python
+envs in the paper's Table 2 comparison.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.buffers import ActionBufferQueue, StateBufferQueue
+from repro.core.specs import EnvSpec
+
+_RESET = object()  # sentinel action: reset the env
+_STOP = object()   # sentinel work item: worker shutdown
+
+
+class HostEnv:
+    """Host environment interface for the thread/process engines."""
+
+    spec: EnvSpec
+
+    def reset(self) -> np.ndarray:
+        raise NotImplementedError
+
+    def step(self, action) -> tuple[np.ndarray, float, bool, dict]:
+        raise NotImplementedError
+
+
+class JittedHostEnv(HostEnv):
+    """Wraps a pure-JAX Environment as a host env with a compiled step.
+
+    The jitted call releases the GIL during XLA execution — the same
+    property that lets EnvPool's C++ envs scale across threads.
+    """
+
+    def __init__(self, env, seed: int = 0):
+        import jax
+
+        self._env = env
+        self.spec = env.spec
+        self._jit_step = jax.jit(env.step)
+        self._jit_init = jax.jit(env.init_state)
+        self._seed = seed
+        self._state = None
+
+    def reset(self) -> np.ndarray:
+        import jax
+
+        self._seed += 1
+        self._state = self._jit_init(jax.random.PRNGKey(self._seed))
+        return np.asarray(self._env.observe(self._state))
+
+    def step(self, action):
+        self._state, ts = self._jit_step(self._state, action)
+        return (
+            np.asarray(ts.obs),
+            float(ts.reward),
+            bool(ts.done),
+            {
+                "terminated": bool(ts.terminated),
+                "truncated": bool(ts.truncated),
+                "episode_return": float(ts.episode_return),
+                "episode_length": int(ts.episode_length),
+                "step_cost": int(ts.step_cost),
+            },
+        )
+
+
+class ThreadEnvPool:
+    """EnvPool's C++ engine, re-built on Python threads (paper §3.1–3.3)."""
+
+    def __init__(
+        self,
+        env_fns: list[Callable[[], HostEnv]],
+        batch_size: int | None = None,
+        num_threads: int | None = None,
+    ):
+        self.num_envs = len(env_fns)
+        self.batch_size = batch_size or self.num_envs
+        if self.batch_size > self.num_envs:
+            raise ValueError("batch_size cannot exceed num_envs")
+        # paper §3.3: thread count bounded by cores; envs 2-3x threads
+        self.num_threads = num_threads or min(self.num_envs, _cpu_count())
+
+        self._envs = [fn() for fn in env_fns]
+        self.spec = self._envs[0].spec
+
+        obs_spec = self.spec.obs_spec
+        fields = {
+            "obs": (obs_spec.shape, obs_spec.dtype),
+            "reward": ((), np.float32),
+            "done": ((), np.bool_),
+            "terminated": ((), np.bool_),
+            "truncated": ((), np.bool_),
+            "env_id": ((), np.int32),
+            "episode_return": ((), np.float32),
+            "episode_length": ((), np.int32),
+            "step_cost": ((), np.int32),
+        }
+        self._actions = ActionBufferQueue(self.num_envs)
+        self._states = StateBufferQueue(fields, self.batch_size, self.num_envs)
+        self._running = True
+        self._threads = [
+            threading.Thread(target=self._worker, daemon=True, name=f"envpool-{i}")
+            for i in range(self.num_threads)
+        ]
+        for t in self._threads:
+            t.start()
+
+    # ------------------------------------------------------------------ #
+    def _worker(self) -> None:
+        while True:
+            item = self._actions.get()
+            if item is _STOP:
+                return
+            env_id, action = item
+            env = self._envs[env_id]
+            if action is _RESET:
+                obs = env.reset()
+                rew, done, info = 0.0, False, {}
+            else:
+                obs, rew, done, info = env.step(action)
+            blk, slot = self._states.acquire_slot()
+            blk.write(
+                slot,
+                {
+                    "obs": obs,
+                    "reward": rew,
+                    "done": done,
+                    "terminated": info.get("terminated", done),
+                    "truncated": info.get("truncated", False),
+                    "env_id": env_id,
+                    "episode_return": info.get("episode_return", 0.0),
+                    "episode_length": info.get("episode_length", 0),
+                    "step_cost": info.get("step_cost", 1),
+                },
+            )
+
+    # ------------------------------------------------------------------ #
+    # EnvPool API
+    # ------------------------------------------------------------------ #
+    def async_reset(self) -> None:
+        """Enqueue a reset for every env (paper A.3: call once at start)."""
+        self._actions.put_batch([(i, _RESET) for i in range(self.num_envs)])
+
+    def send(self, actions: np.ndarray, env_ids: np.ndarray) -> None:
+        self._actions.put_batch(
+            [(int(e), a) for e, a in zip(env_ids, actions)]
+        )
+
+    def recv(self, timeout: float | None = 60.0) -> dict[str, np.ndarray]:
+        return self._states.take(timeout=timeout)
+
+    def step(self, actions: np.ndarray, env_ids: np.ndarray
+             ) -> dict[str, np.ndarray]:
+        self.send(actions, env_ids)
+        return self.recv()
+
+    def reset(self) -> dict[str, np.ndarray]:
+        """Synchronous-style reset: only valid when batch_size == num_envs
+        or when immediately followed by the async recv/send loop."""
+        self.async_reset()
+        return self.recv()
+
+    def close(self) -> None:
+        if not self._running:
+            return
+        self._running = False
+        self._actions.put_batch([_STOP] * self.num_threads)
+        for t in self._threads:
+            t.join(timeout=5.0)
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
+
+
+def _cpu_count() -> int:
+    import os
+
+    return os.cpu_count() or 1

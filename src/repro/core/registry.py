@@ -1,0 +1,152 @@
+"""``repro.make`` — the EnvPool ``envpool.make`` analogue (paper §1 API).
+
+    env = make("Pong-v5", num_envs=100)                 # device pool, sync
+    env = make("Pong-v5", num_envs=100, batch_size=90)  # device pool, async
+    env = make("Ant-v3", engine="thread", num_envs=64)  # host thread pool
+    env = make("Ant-v3", engine="subprocess", ...)      # gym.vector baseline
+
+Engines: ``device`` (TPU-native, default), ``device-masked`` (tick
+ablation), ``thread`` (paper-faithful C++-pool port), ``subprocess``,
+``forloop``, and the pure-Python single-env classes via ``py_env``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+from repro.core.device_pool import DeviceEnvPool
+from repro.envs.base import Environment
+
+_REGISTRY: dict[str, Callable[..., Environment]] = {}
+_PY_REGISTRY: dict[str, Callable[..., Any]] = {}
+_DEFAULTS_DONE = False
+
+
+def register(name: str, factory: Callable[..., Environment]) -> None:
+    _REGISTRY[name] = factory
+
+
+def register_py(name: str, factory: Callable[..., Any]) -> None:
+    _PY_REGISTRY[name] = factory
+
+
+def list_envs() -> list[str]:
+    _ensure_defaults()
+    return sorted(_REGISTRY)
+
+
+def _jax_env(task_id: str, **kwargs: Any) -> Environment:
+    _ensure_defaults()
+    if task_id not in _REGISTRY:
+        raise KeyError(f"unknown env {task_id!r}; known: {list_envs()}")
+    return _REGISTRY[task_id](**kwargs)
+
+
+def make(
+    task_id: str,
+    num_envs: int,
+    batch_size: int | None = None,
+    engine: str = "device",
+    num_threads: int | None = None,
+    seed: int = 0,
+    **env_kwargs: Any,
+):
+    """Create a vectorized env pool, EnvPool-style."""
+    if engine in ("device", "device-masked"):
+        env = _jax_env(task_id, **env_kwargs)
+        mode = None if engine == "device" else "masked"
+        if mode is None:
+            mode = "sync" if batch_size in (None, num_envs) else "async"
+        return DeviceEnvPool(env, num_envs, batch_size, mode=mode)
+
+    if engine == "thread":
+        from repro.core.host_pool import JittedHostEnv, ThreadEnvPool
+
+        fns = [
+            (lambda i=i: JittedHostEnv(_jax_env(task_id, **env_kwargs), seed=seed + i))
+            for i in range(num_envs)
+        ]
+        return ThreadEnvPool(fns, batch_size=batch_size, num_threads=num_threads)
+
+    if engine == "forloop":
+        from repro.core.baselines import ForLoopEnv
+        from repro.core.host_pool import JittedHostEnv
+
+        fns = [
+            (lambda i=i: JittedHostEnv(_jax_env(task_id, **env_kwargs), seed=seed + i))
+            for i in range(num_envs)
+        ]
+        return ForLoopEnv(fns)
+
+    if engine == "subprocess":
+        from repro.core.baselines import SubprocessEnv
+
+        env = _jax_env(task_id, **env_kwargs)
+        return SubprocessEnv(
+            _SpawnFactory(task_id, seed, env_kwargs),
+            num_envs,
+            num_workers=num_threads,
+            spec=env.spec,
+        )
+
+    raise ValueError(f"unknown engine {engine!r}")
+
+
+def make_py(task_id: str, seed: int = 0, **kwargs: Any):
+    """Single pure-Python env (the paper's Table 2 'Python' baseline)."""
+    _ensure_defaults()
+    if task_id not in _PY_REGISTRY:
+        raise KeyError(f"no python env {task_id!r}; known: {sorted(_PY_REGISTRY)}")
+    return _PY_REGISTRY[task_id](seed=seed, **kwargs)
+
+
+class _SpawnFactory:
+    """Picklable env factory for spawn-based subprocess workers."""
+
+    def __init__(self, task_id: str, seed: int, env_kwargs: dict[str, Any]):
+        self.task_id = task_id
+        self.seed = seed
+        self.env_kwargs = env_kwargs
+
+    def __call__(self, i: int):
+        from repro.core.host_pool import JittedHostEnv
+
+        return JittedHostEnv(
+            _jax_env(self.task_id, **self.env_kwargs), seed=self.seed + i
+        )
+
+
+# --------------------------------------------------------------------- #
+# default registrations
+# --------------------------------------------------------------------- #
+def _ensure_defaults() -> None:
+    # lazy: avoids the repro.core <-> repro.envs import cycle
+    global _DEFAULTS_DONE
+    if _DEFAULTS_DONE:
+        return
+    _DEFAULTS_DONE = True
+    from repro.envs.atari_like import AtariLike
+    from repro.envs.classic import CartPole, MountainCar, Pendulum
+    from repro.envs.mujoco_like import MujocoLike
+    from repro.envs.token_env import TokenEnv
+    from repro.envs.host_numpy import (
+        PyAtariLike,
+        PyCartPole,
+        PyMujocoLike,
+        PyPendulum,
+    )
+
+    register("CartPole-v1", CartPole)
+    register("MountainCar-v0", MountainCar)
+    register("Pendulum-v1", Pendulum)
+    register("Pong-v5", AtariLike)
+    register("AtariLike-Pong-v5", AtariLike)
+    register("Ant-v3", MujocoLike)
+    register("MujocoLike-Ant-v3", MujocoLike)
+    register("TokenCopy-v0", TokenEnv)
+
+    register_py("CartPole-v1", PyCartPole)
+    register_py("Pendulum-v1", PyPendulum)
+    register_py("Pong-v5", PyAtariLike)
+    register_py("Ant-v3", PyMujocoLike)
+

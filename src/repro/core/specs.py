@@ -1,0 +1,120 @@
+"""Environment specs and timestep containers.
+
+Mirrors EnvPool's ``EnvSpec`` (paper §3.4): every environment declares its
+observation/action spaces so that engines can pre-allocate the
+StateBufferQueue blocks without stepping anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.pytree import pytree_dataclass, static_field
+
+
+@dataclasses.dataclass(frozen=True)
+class ArraySpec:
+    """Shape/dtype/bounds of a single array field."""
+
+    shape: tuple[int, ...]
+    dtype: Any
+    minimum: float | None = None
+    maximum: float | None = None
+    name: str = ""
+
+    def zeros(self, leading: tuple[int, ...] = ()) -> jnp.ndarray:
+        return jnp.zeros(leading + self.shape, self.dtype)
+
+    def sample(self, rng: np.random.Generator, leading: tuple[int, ...] = ()):
+        """Host-side random sample (used by pure-simulation benchmarks)."""
+        shape = leading + self.shape
+        if np.issubdtype(np.dtype(self.dtype), np.integer):
+            lo = int(self.minimum) if self.minimum is not None else 0
+            hi = int(self.maximum) if self.maximum is not None else 1
+            return rng.integers(lo, hi + 1, size=shape, dtype=self.dtype)
+        lo = self.minimum if self.minimum is not None else -1.0
+        hi = self.maximum if self.maximum is not None else 1.0
+        return rng.uniform(lo, hi, size=shape).astype(self.dtype)
+
+    def sample_jax(self, key: jax.Array, leading: tuple[int, ...] = ()):
+        shape = leading + self.shape
+        if np.issubdtype(np.dtype(self.dtype), np.integer):
+            lo = int(self.minimum) if self.minimum is not None else 0
+            hi = int(self.maximum) if self.maximum is not None else 1
+            return jax.random.randint(key, shape, lo, hi + 1, dtype=self.dtype)
+        lo = self.minimum if self.minimum is not None else -1.0
+        hi = self.maximum if self.maximum is not None else 1.0
+        return jax.random.uniform(key, shape, self.dtype, lo, hi)
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvSpec:
+    """Static description of an environment (EnvPool ``EnvSpec`` analogue)."""
+
+    name: str
+    obs_spec: ArraySpec
+    act_spec: ArraySpec
+    max_episode_steps: int = 1000
+    # Cost model: every step consumes between min_cost and max_cost work
+    # units (substeps).  Engines use this to pre-size while-loops; the
+    # async scheduler uses the per-step predicted cost (see Environment.step_cost).
+    min_cost: int = 1
+    max_cost: int = 1
+
+    @property
+    def num_actions(self) -> int:
+        if np.issubdtype(np.dtype(self.act_spec.dtype), np.integer):
+            return int(self.act_spec.maximum) + 1
+        raise ValueError(f"{self.name}: continuous action space has no num_actions")
+
+
+@pytree_dataclass
+class TimeStep:
+    """One (batched) environment transition.
+
+    ``env_id`` mirrors EnvPool's ``info["env_id"]`` — in async mode the
+    batch is an arbitrary subset of the pool, and the agent must route
+    actions back by id.
+    """
+
+    obs: Any
+    reward: jnp.ndarray
+    done: jnp.ndarray          # terminated | truncated (post-autoreset signal)
+    terminated: jnp.ndarray
+    truncated: jnp.ndarray
+    env_id: jnp.ndarray
+    episode_return: jnp.ndarray  # return of episode that just ended (valid where done)
+    episode_length: jnp.ndarray
+    step_cost: jnp.ndarray       # work units this step consumed (for profiling)
+
+    @property
+    def info(self) -> dict[str, jnp.ndarray]:
+        """gym-style info dict (paper §1 API: ``info["env_id"]``)."""
+        return {
+            "env_id": self.env_id,
+            "episode_return": self.episode_return,
+            "episode_length": self.episode_length,
+            "terminated": self.terminated,
+            "truncated": self.truncated,
+            "step_cost": self.step_cost,
+        }
+
+
+def zero_timestep(spec: EnvSpec, batch: int) -> TimeStep:
+    """Pre-allocated empty TimeStep block (StateBufferQueue slot layout)."""
+    return TimeStep(
+        obs=spec.obs_spec.zeros((batch,)),
+        reward=jnp.zeros((batch,), jnp.float32),
+        done=jnp.zeros((batch,), jnp.bool_),
+        terminated=jnp.zeros((batch,), jnp.bool_),
+        truncated=jnp.zeros((batch,), jnp.bool_),
+        env_id=jnp.zeros((batch,), jnp.int32),
+        episode_return=jnp.zeros((batch,), jnp.float32),
+        episode_length=jnp.zeros((batch,), jnp.int32),
+        step_cost=jnp.zeros((batch,), jnp.int32),
+    )

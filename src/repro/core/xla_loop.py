@@ -1,0 +1,67 @@
+"""XLA-jitted actor loop (paper Appendix E).
+
+The paper exposes ``handle, recv, send, step = env.xla()`` so the whole
+collect loop lowers into XLA and runs free of the Python GIL.  Here the
+pool already lives on-device, so the actor loop is a single ``lax.scan``
+— the logical conclusion of Appendix E: *zero* host round-trips.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.device_pool import DeviceEnvPool, PoolState
+from repro.core.specs import TimeStep
+
+
+def build_collect_fn(
+    pool: DeviceEnvPool,
+    policy_fn: Callable[[Any, Any, jax.Array], Any],
+    num_steps: int,
+    donate: bool = True,
+):
+    """Returns jitted ``collect(ps, policy_params, last_ts, key) ->
+    (ps, last_ts, trajectory)`` where trajectory stacks ``num_steps``
+    TimeStep batches of size ``batch_size`` plus the actions taken.
+
+    ``policy_fn(params, obs, key) -> actions`` must be jit-traceable.
+    """
+
+    def one_step(carry, key):
+        ps, ts, params = carry
+        actions = policy_fn(params, ts.obs, key)
+        ps, new_ts = pool.step(ps, actions, ts.env_id)
+        return (ps, new_ts, params), (ts, actions)
+
+    def collect(ps: PoolState, params: Any, last_ts: TimeStep, key: jax.Array):
+        keys = jax.random.split(key, num_steps)
+        (ps, last_ts, _), (traj, acts) = lax.scan(
+            one_step, (ps, last_ts, params), keys
+        )
+        return ps, last_ts, traj, acts
+
+    kwargs = {"donate_argnums": (0,)} if donate else {}
+    return jax.jit(collect, **kwargs)
+
+
+def build_random_collect_fn(pool: DeviceEnvPool, num_steps: int):
+    """Random-action collect loop — the paper's pure-simulation benchmark
+    (§4.1: "randomly sampled actions as inputs")."""
+
+    env = pool.env
+
+    def policy(params, obs, key):
+        del params, obs
+        return env.sample_actions(key, pool.batch_size)
+
+    return build_collect_fn(pool, policy, num_steps)
+
+
+def frames_per_batch(pool: DeviceEnvPool) -> int:
+    """Frames produced by one recv: batch_size steps × frameskip
+    (paper counts Atari FPS with frameskip 4, MuJoCo with 5 substeps)."""
+    return pool.batch_size * pool.spec.min_cost

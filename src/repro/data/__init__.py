@@ -1,0 +1,3 @@
+from repro.data.pipeline import BatchSpec, BinTokenSource, SyntheticSource, write_bin_tokens
+
+__all__ = ["BatchSpec", "BinTokenSource", "SyntheticSource", "write_bin_tokens"]

@@ -1,0 +1,14 @@
+from repro.distributed.sharding import (
+    BASELINE_RULES,
+    SP_RULES,
+    RuleSet,
+    make_shard_fn,
+    param_logical_axes,
+    param_shardings,
+    resolve,
+)
+
+__all__ = [
+    "BASELINE_RULES", "SP_RULES", "RuleSet", "make_shard_fn",
+    "param_logical_axes", "param_shardings", "resolve",
+]

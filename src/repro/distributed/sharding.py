@@ -1,0 +1,310 @@
+"""Rule-based sharding resolver.
+
+Models annotate activations with *logical* axis names; parameters get
+logical axes derived from their path.  A ``RuleSet`` maps logical names to
+mesh axes.  ``resolve()`` validates divisibility — a logical axis whose
+size does not divide the mapped mesh extent falls back to replication for
+that dim (never a compile error), so one rule set serves all 10 archs.
+
+Baseline layout (DESIGN.md §6):
+  weights:  FSDP over (pod, data) on the d_model-ish dim, TP over model
+            on heads/mlp/vocab/expert dims
+  acts:     batch -> (pod, data); heads/mlp/vocab -> model
+  kv cache: kv_seq -> model (flash-decoding-style sharded cache reads)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = tuple[str, ...] | str | None
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleSet:
+    rules: dict[str, Axes]
+    name: str = "baseline"
+
+    def get(self, logical: str | None) -> Axes:
+        if logical is None:
+            return None
+        return self.rules.get(logical)
+
+    def replace(self, **kw: Axes) -> "RuleSet":
+        new = dict(self.rules)
+        new.update(kw)
+        return RuleSet(new, name=self.name + "+")
+
+
+FSDP = ("pod", "data")
+
+BASELINE_RULES = RuleSet({
+    # activations
+    "batch": FSDP,
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": None,
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "capacity": "model",   # MoE fallback: when E doesn't divide the model
+                           # axis (granite 40e), shard expert capacity slots
+    "kv_seq": "model",
+    "layers": None,
+    "enc_seq": None,
+    # weights
+    "w_fsdp": FSDP,       # d_model-like weight dim
+    "w_model": "model",   # heads/mlp/vocab-like weight dim
+    "w_expert": "model",
+})
+
+# sequence-parallel variant: residual stream sharded over model between
+# attention/mlp blocks (big-model memory relief)
+SP_RULES = BASELINE_RULES.replace(seq="model")
+SP_RULES = dataclasses.replace(SP_RULES, name="seqpar")
+
+# data/sequence-parallel-only variant for SMALL models (§Perf): no tensor
+# parallelism — weights replicated over the model axis (FSDP over data
+# only), the model axis shards the sequence instead.  Kills the
+# per-layer TP all-reduces that dominate small-model cells.
+DP_RULES = RuleSet({
+    "batch": FSDP,
+    "seq": "model",
+    "embed": None,
+    "heads": None,
+    "kv_heads": None,
+    "mlp": None,
+    "vocab": None,
+    "expert": None,
+    "kv_seq": "model",
+    "layers": None,
+    "enc_seq": None,
+    "w_fsdp": ("data",),
+    "w_model": None,
+    "w_expert": None,
+}, name="dp")
+
+
+# ZeRO-1 for small/medium models (§Perf): parameters fully REPLICATED
+# (no per-layer weight gathers, no activation psums from sharded weight
+# dims); only the optimizer state is sharded (over data) and the gradient
+# all-reduce pays one full-model pass per step.
+ZERO1_RULES = RuleSet({
+    "batch": FSDP,
+    "seq": None,
+    "embed": None,
+    "heads": None,
+    "kv_heads": None,
+    "mlp": None,
+    "vocab": None,
+    "expert": None,
+    "capacity": None,
+    "kv_seq": "model",
+    "layers": None,
+    "enc_seq": None,
+    "w_fsdp": None,
+    "w_model": None,
+    "w_expert": None,
+}, name="zero1")
+
+
+def opt_state_shardings(mesh: Mesh, opt_shape: Any) -> Any:
+    """ZeRO-1: shard every optimizer-state leaf over the data axis on its
+    largest divisible dim (params stay replicated)."""
+    data = mesh.shape.get("data", 1)
+
+    def one(leaf):
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        dims = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+        for i in dims:
+            if leaf.shape[i] % data == 0 and leaf.shape[i] >= data:
+                spec = [None] * leaf.ndim
+                spec[i] = "data"
+                return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, opt_shape)
+
+
+def _mesh_extent(mesh: Mesh, axes: Axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def resolve(
+    mesh: Mesh, shape: tuple[int, ...], logical: tuple[str | None, ...],
+    rules: RuleSet,
+) -> P:
+    """Logical names -> PartitionSpec with divisibility fallback."""
+    assert len(shape) == len(logical), (shape, logical)
+    used: set[str] = set()
+    spec: list[Axes] = []
+    for size, name in zip(shape, logical):
+        axes = rules.get(name)
+        if axes is None:
+            spec.append(None)
+            continue
+        ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+        # drop axes already used by an earlier dim or not dividing the size
+        keep: list[str] = []
+        extent = 1
+        for a in ax_tuple:
+            if a not in mesh.shape:   # e.g. no "pod" axis on single-pod mesh
+                continue
+            if a in used:
+                continue
+            if size % (extent * mesh.shape[a]) != 0:
+                continue
+            keep.append(a)
+            extent *= mesh.shape[a]
+        if not keep:
+            spec.append(None)
+        else:
+            used.update(keep)
+            spec.append(tuple(keep) if len(keep) > 1 else keep[0])
+    return P(*spec)
+
+
+def make_shard_fn(mesh: Mesh | None, rules: RuleSet):
+    """Returns shard(x, logical_names) -> with_sharding_constraint."""
+    if mesh is None:
+        return lambda x, names: x
+
+    def shard(x: jnp.ndarray, names: tuple[str | None, ...]) -> jnp.ndarray:
+        if x.ndim != len(names):
+            # allow trailing unbroadcast dims (e.g. head_dim) unnamed
+            names = tuple(names) + (None,) * (x.ndim - len(names))
+        spec = resolve(mesh, x.shape, names, rules)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return shard
+
+
+# --------------------------------------------------------------------- #
+# parameter logical axes (path-driven)
+# --------------------------------------------------------------------- #
+_PARAM_TABLE: list[tuple[tuple[str, ...], tuple[str | None, ...]]] = [
+    # (path suffix keys, logical axes WITHOUT the stacked-layer dim)
+    (("embed",), ("vocab", "w_fsdp")),
+    (("dec_embed",), ("vocab", "w_fsdp")),
+    (("lm_head",), ("w_fsdp", "vocab")),
+    (("dec_pos",), ("w_fsdp", None)),
+    (("attn", "wq"), ("w_fsdp", "w_model")),
+    (("attn", "wk"), ("w_fsdp", "w_model")),
+    (("attn", "wv"), ("w_fsdp", "w_model")),
+    (("attn", "wo"), ("w_model", "w_fsdp")),
+    (("self_attn", "wq"), ("w_fsdp", "w_model")),
+    (("self_attn", "wk"), ("w_fsdp", "w_model")),
+    (("self_attn", "wv"), ("w_fsdp", "w_model")),
+    (("self_attn", "wo"), ("w_model", "w_fsdp")),
+    (("cross_attn", "wq"), ("w_fsdp", "w_model")),
+    (("cross_attn", "wk"), ("w_fsdp", "w_model")),
+    (("cross_attn", "wv"), ("w_fsdp", "w_model")),
+    (("cross_attn", "wo"), ("w_model", "w_fsdp")),
+    (("mlp", "wi"), ("w_fsdp", "w_model")),
+    (("mlp", "wg"), ("w_fsdp", "w_model")),
+    (("mlp", "wo"), ("w_model", "w_fsdp")),
+    (("moe", "router"), ("w_fsdp", None)),
+    (("moe", "wi"), ("w_expert", "w_fsdp", None)),
+    (("moe", "wg"), ("w_expert", "w_fsdp", None)),
+    (("moe", "wo"), ("w_expert", None, "w_fsdp")),
+    (("ssm", "in_proj"), ("w_fsdp", "w_model")),
+    (("ssm", "out_proj"), ("w_model", "w_fsdp")),
+    (("ssm", "conv"), (None, "w_model")),
+    (("ssm", "A_log"), ("w_model", None)),
+    (("ssm", "B_proj"), ("w_model", None)),
+    (("ssm", "C_proj"), ("w_model", None)),
+    (("ssm", "dt_proj"), ("w_model", None)),
+    (("ssm", "D"), ("w_model",)),
+    (("mlstm", "wq"), ("w_fsdp", "w_model")),
+    (("mlstm", "wk"), ("w_fsdp", "w_model")),
+    (("mlstm", "wv"), ("w_fsdp", "w_model")),
+    (("mlstm", "wog"), ("w_fsdp", "w_model")),
+    (("mlstm", "wo"), ("w_model", "w_fsdp")),
+    (("slstm", "up"), ("w_fsdp", "w_model")),
+    (("slstm", "down"), ("w_model", "w_fsdp")),
+]
+
+
+def _match(path_keys: tuple[str, ...], suffix: tuple[str, ...]) -> bool:
+    if len(suffix) > len(path_keys):
+        return False
+    return path_keys[-len(suffix):] == suffix
+
+
+def param_logical_axes(params: Any) -> Any:
+    """Pytree of logical-axis tuples parallel to ``params``.  Stacked layer
+    leading dims (from scan-init) are detected by ndim mismatch and get a
+    'layers' prefix."""
+
+    def one(path, leaf) -> tuple[str | None, ...]:
+        keys = tuple(
+            p.key if hasattr(p, "key") else str(getattr(p, "idx", p))
+            for p in path
+        )
+        for suffix, axes in _PARAM_TABLE:
+            if _match(keys, suffix):
+                if leaf.ndim == len(axes) + 1:   # stacked layers
+                    return ("layers",) + axes
+                if leaf.ndim == len(axes):
+                    return axes
+        # norms / gates / biases / small vectors: replicate
+        return (None,) * leaf.ndim
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(mesh: Mesh, params_shape: Any, rules: RuleSet) -> Any:
+    """NamedShardings for a params (or opt-state) shape pytree."""
+    axes = param_logical_axes(params_shape)
+
+    def one(leaf, ax):
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, resolve(mesh, leaf.shape, ax, rules))
+
+    return jax.tree.map(one, params_shape, axes)
+
+
+def tree_shardings_like(mesh: Mesh, tree_shape: Any, logical_fn) -> Any:
+    """Generic: NamedShardings from a fn(path, leaf)->logical names."""
+
+    def one(path, leaf):
+        names = logical_fn(path, leaf)
+        return NamedSharding(
+            mesh, resolve(mesh, leaf.shape, names, BASELINE_RULES)
+        )
+
+    return jax.tree_util.tree_map_with_path(one, tree_shape)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def bytes_per_device(tree_shape: Any, shardings: Any, mesh: Mesh) -> int:
+    """Estimate per-device bytes of a sharded pytree (for reports)."""
+    total = 0
+    for leaf, sh in zip(jax.tree.leaves(tree_shape), jax.tree.leaves(
+            shardings, is_leaf=lambda x: isinstance(x, NamedSharding))):
+        n = int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+        spec = sh.spec
+        denom = 1
+        for axes in spec:
+            if axes is None:
+                continue
+            denom *= _mesh_extent(mesh, axes)
+        total += n // denom
+    return total

@@ -1,0 +1,15 @@
+from repro.envs.atari_like import AtariLike
+from repro.envs.base import Environment
+from repro.envs.classic import CartPole, MountainCar, Pendulum
+from repro.envs.mujoco_like import MujocoLike
+from repro.envs.token_env import TokenEnv
+
+__all__ = [
+    "AtariLike",
+    "CartPole",
+    "Environment",
+    "MountainCar",
+    "MujocoLike",
+    "Pendulum",
+    "TokenEnv",
+]

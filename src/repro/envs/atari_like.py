@@ -1,0 +1,171 @@
+"""Atari-like environment: a Pong-style grid game with the ALE interface
+cost structure (paper §4.1 benchmarks Atari Pong with frameskip 4).
+
+Matched properties with the real benchmark target:
+  * observation: stacked 4 × 84 × 84 uint8 frames (post-wrapper ALE layout),
+  * frameskip 4 — each agent step advances 4 emulator frames,
+  * variable step cost: 4 base frames, +2 on point-score (ball respawn /
+    serve animation), +3 on episode reset (ROM reboot) — this is the
+    long-tail variability the async engine exploits,
+  * 6 discrete actions (NOOP/FIRE/UP/DOWN/UPFIRE/DOWNFIRE, like Pong-v5),
+  * first to 21 points ends the episode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.specs import ArraySpec, EnvSpec
+from repro.envs.base import Environment
+from repro.utils.pytree import pytree_dataclass
+
+H = W = 84
+PADDLE_LEN = 12
+FRAME_STACK = 4
+WIN_SCORE = 21
+
+
+@pytree_dataclass
+class AtariLikeState:
+    ball_x: jnp.ndarray      # float, [0, W)
+    ball_y: jnp.ndarray
+    ball_vx: jnp.ndarray
+    ball_vy: jnp.ndarray
+    paddle_y: jnp.ndarray    # agent paddle (right side)
+    enemy_y: jnp.ndarray     # scripted opponent (left side)
+    score_us: jnp.ndarray
+    score_them: jnp.ndarray
+    frames: jnp.ndarray      # (FRAME_STACK, H, W) uint8
+    just_scored: jnp.ndarray # bool: a point was scored in the previous step
+    t: jnp.ndarray
+    rng: jax.Array
+    ep_return: jnp.ndarray
+    reward_acc: jnp.ndarray
+
+
+class AtariLike(Environment):
+    """Pong-like game; env name mirrors EnvPool's ``Pong-v5``."""
+
+    def __init__(self, max_episode_steps: int = 2000):
+        self.spec = EnvSpec(
+            name="AtariLike-Pong-v5",
+            obs_spec=ArraySpec((FRAME_STACK, H, W), jnp.uint8, 0, 255),
+            act_spec=ArraySpec((), jnp.int32, 0, 5),
+            max_episode_steps=max_episode_steps,
+            min_cost=4,          # frameskip
+            max_cost=9,          # frameskip + score + reset animations
+        )
+
+    # -------------------------------------------------------------- #
+    def init_state(self, key: jax.Array) -> AtariLikeState:
+        rng, k1, k2 = jax.random.split(key, 3)
+        angle = jax.random.uniform(k1, (), jnp.float32, -0.7, 0.7)
+        side = jnp.where(jax.random.bernoulli(k2), 1.0, -1.0)
+        z = jnp.float32(0.0)
+        s = AtariLikeState(
+            ball_x=jnp.float32(W / 2),
+            ball_y=jnp.float32(H / 2),
+            ball_vx=side * 1.5 * jnp.cos(angle),
+            ball_vy=1.5 * jnp.sin(angle),
+            paddle_y=jnp.float32(H / 2),
+            enemy_y=jnp.float32(H / 2),
+            score_us=jnp.int32(0),
+            score_them=jnp.int32(0),
+            frames=jnp.zeros((FRAME_STACK, H, W), jnp.uint8),
+            just_scored=jnp.bool_(False),
+            t=jnp.int32(0),
+            rng=rng,
+            ep_return=z,
+            reward_acc=z,
+        )
+        frame = self._render(s)
+        return s.replace(frames=jnp.broadcast_to(frame, (FRAME_STACK, H, W)))
+
+    def _render(self, s: AtariLikeState) -> jnp.ndarray:
+        ys = jnp.arange(H, dtype=jnp.float32)[:, None]
+        xs = jnp.arange(W, dtype=jnp.float32)[None, :]
+        ball = (jnp.abs(ys - s.ball_y) <= 1.0) & (jnp.abs(xs - s.ball_x) <= 1.0)
+        pad = (jnp.abs(ys - s.paddle_y) <= PADDLE_LEN / 2) & (xs >= W - 3)
+        enemy = (jnp.abs(ys - s.enemy_y) <= PADDLE_LEN / 2) & (xs <= 2)
+        frame = jnp.where(ball | pad | enemy, 236, 52).astype(jnp.uint8)
+        return frame
+
+    def _advance_frame(self, s: AtariLikeState, action) -> AtariLikeState:
+        """One emulator frame."""
+        # paddle control
+        dy = jnp.where(
+            (action == 2) | (action == 4), -2.0,
+            jnp.where((action == 3) | (action == 5), 2.0, 0.0),
+        )
+        paddle_y = jnp.clip(s.paddle_y + dy, PADDLE_LEN / 2, H - PADDLE_LEN / 2)
+        # scripted opponent tracks the ball at limited speed
+        enemy_dy = jnp.clip(s.ball_y - s.enemy_y, -1.6, 1.6)
+        enemy_y = jnp.clip(s.enemy_y + enemy_dy, PADDLE_LEN / 2, H - PADDLE_LEN / 2)
+
+        bx = s.ball_x + s.ball_vx
+        by = s.ball_y + s.ball_vy
+        # wall bounce
+        vy = jnp.where((by < 1) | (by > H - 2), -s.ball_vy, s.ball_vy)
+        by = jnp.clip(by, 1.0, H - 2.0)
+        # paddle bounce (right = agent, left = enemy)
+        hit_pad = (bx >= W - 4) & (jnp.abs(by - paddle_y) <= PADDLE_LEN / 2 + 1)
+        hit_enemy = (bx <= 3) & (jnp.abs(by - enemy_y) <= PADDLE_LEN / 2 + 1)
+        vx = jnp.where(hit_pad | hit_enemy, -s.ball_vx * 1.05, s.ball_vx)
+        # spin from where it hits the paddle
+        vy = jnp.where(hit_pad, vy + 0.35 * (by - paddle_y) / PADDLE_LEN, vy)
+        vy = jnp.where(hit_enemy, vy + 0.35 * (by - enemy_y) / PADDLE_LEN, vy)
+        bx = jnp.clip(bx, 0.0, jnp.float32(W - 1))
+
+        # scoring
+        we_score = (bx >= W - 1) & ~hit_pad
+        they_score = (bx <= 0) & ~hit_enemy
+        scored = we_score | they_score
+        reward = jnp.where(we_score, 1.0, jnp.where(they_score, -1.0, 0.0))
+
+        # ball respawn on score
+        rng, k = jax.random.split(s.rng)
+        angle = jax.random.uniform(k, (), jnp.float32, -0.7, 0.7)
+        serve_vx = jnp.where(we_score, -1.5, 1.5) * jnp.cos(angle)
+        bx = jnp.where(scored, W / 2, bx)
+        by = jnp.where(scored, H / 2, by)
+        vx = jnp.where(scored, serve_vx, vx)
+        vy = jnp.where(scored, 1.5 * jnp.sin(angle), vy)
+        vx = jnp.clip(vx, -3.0, 3.0)
+        vy = jnp.clip(vy, -3.0, 3.0)
+
+        return s.replace(
+            ball_x=bx, ball_y=by, ball_vx=vx, ball_vy=vy,
+            paddle_y=paddle_y, enemy_y=enemy_y,
+            score_us=s.score_us + we_score.astype(jnp.int32),
+            score_them=s.score_them + they_score.astype(jnp.int32),
+            just_scored=scored | s.just_scored,
+            rng=rng,
+            reward_acc=s.reward_acc + reward,
+        )
+
+    # -------------------------------------------------------------- #
+    def substep(self, s: AtariLikeState, action) -> AtariLikeState:
+        s = self._advance_frame(s, action)
+        # push the newest frame into the stack (render only once per
+        # substep; the last rendered frame of the skip dominates, matching
+        # the ALE max-pool wrapper's effect on cost).
+        frame = self._render(s)
+        frames = jnp.concatenate([s.frames[1:], frame[None]], axis=0)
+        return s.replace(frames=frames)
+
+    def step_cost(self, s: AtariLikeState, action) -> jnp.ndarray:
+        base = jnp.int32(4)                         # frameskip
+        serve = jnp.where(s.just_scored, 2, 0)      # serve animation
+        reboot = jnp.where(s.t == 0, 3, 0)          # ROM reset on new episode
+        return base + serve.astype(jnp.int32) + reboot.astype(jnp.int32)
+
+    def terminal(self, s: AtariLikeState) -> jnp.ndarray:
+        return (s.score_us >= WIN_SCORE) | (s.score_them >= WIN_SCORE)
+
+    def observe(self, s: AtariLikeState) -> jnp.ndarray:
+        return s.frames
+
+    def pre_step(self, s: AtariLikeState) -> AtariLikeState:
+        # clear the score latch after step_cost consumed it
+        return super().pre_step(s).replace(just_scored=jnp.bool_(False))

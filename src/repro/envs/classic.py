@@ -1,0 +1,194 @@
+"""Classic control environments (paper §1: "classic RL environments like
+mountain car, cartpole").  Constant step cost — the control group showing
+async ≈ sync when execution time is uniform.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.specs import ArraySpec, EnvSpec
+from repro.envs.base import Environment
+from repro.utils.pytree import pytree_dataclass
+
+
+# --------------------------------------------------------------------- #
+# CartPole
+# --------------------------------------------------------------------- #
+@pytree_dataclass
+class CartPoleState:
+    x: jnp.ndarray
+    x_dot: jnp.ndarray
+    theta: jnp.ndarray
+    theta_dot: jnp.ndarray
+    t: jnp.ndarray
+    rng: jax.Array
+    ep_return: jnp.ndarray
+    reward_acc: jnp.ndarray
+
+
+class CartPole(Environment):
+    """CartPole-v1 dynamics (Sutton & Barto / gym classic)."""
+
+    GRAVITY = 9.8
+    CART_MASS = 1.0
+    POLE_MASS = 0.1
+    TOTAL_MASS = CART_MASS + POLE_MASS
+    LENGTH = 0.5
+    POLEMASS_LENGTH = POLE_MASS * LENGTH
+    FORCE_MAG = 10.0
+    TAU = 0.02
+    X_LIMIT = 2.4
+    THETA_LIMIT = 12 * 2 * jnp.pi / 360
+
+    def __init__(self, max_episode_steps: int = 500):
+        self.spec = EnvSpec(
+            name="CartPole-v1",
+            obs_spec=ArraySpec((4,), jnp.float32, -4.8, 4.8),
+            act_spec=ArraySpec((), jnp.int32, 0, 1),
+            max_episode_steps=max_episode_steps,
+            min_cost=1,
+            max_cost=1,
+        )
+
+    def init_state(self, key: jax.Array) -> CartPoleState:
+        rng, sub = jax.random.split(key)
+        init = jax.random.uniform(sub, (4,), jnp.float32, -0.05, 0.05)
+        z = jnp.float32(0.0)
+        return CartPoleState(
+            x=init[0], x_dot=init[1], theta=init[2], theta_dot=init[3],
+            t=jnp.int32(0), rng=rng, ep_return=z, reward_acc=z,
+        )
+
+    def substep(self, s: CartPoleState, action) -> CartPoleState:
+        force = jnp.where(action == 1, self.FORCE_MAG, -self.FORCE_MAG)
+        costh = jnp.cos(s.theta)
+        sinth = jnp.sin(s.theta)
+        temp = (force + self.POLEMASS_LENGTH * s.theta_dot**2 * sinth) / self.TOTAL_MASS
+        theta_acc = (self.GRAVITY * sinth - costh * temp) / (
+            self.LENGTH * (4.0 / 3.0 - self.POLE_MASS * costh**2 / self.TOTAL_MASS)
+        )
+        x_acc = temp - self.POLEMASS_LENGTH * theta_acc * costh / self.TOTAL_MASS
+        return s.replace(
+            x=s.x + self.TAU * s.x_dot,
+            x_dot=s.x_dot + self.TAU * x_acc,
+            theta=s.theta + self.TAU * s.theta_dot,
+            theta_dot=s.theta_dot + self.TAU * theta_acc,
+            reward_acc=s.reward_acc + 1.0,
+        )
+
+    def terminal(self, s: CartPoleState) -> jnp.ndarray:
+        return (
+            (jnp.abs(s.x) > self.X_LIMIT) | (jnp.abs(s.theta) > self.THETA_LIMIT)
+        )
+
+    def observe(self, s: CartPoleState) -> jnp.ndarray:
+        return jnp.stack([s.x, s.x_dot, s.theta, s.theta_dot]).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------- #
+# MountainCar
+# --------------------------------------------------------------------- #
+@pytree_dataclass
+class MountainCarState:
+    pos: jnp.ndarray
+    vel: jnp.ndarray
+    t: jnp.ndarray
+    rng: jax.Array
+    ep_return: jnp.ndarray
+    reward_acc: jnp.ndarray
+
+
+class MountainCar(Environment):
+    def __init__(self, max_episode_steps: int = 200):
+        self.spec = EnvSpec(
+            name="MountainCar-v0",
+            obs_spec=ArraySpec((2,), jnp.float32, -1.2, 0.6),
+            act_spec=ArraySpec((), jnp.int32, 0, 2),
+            max_episode_steps=max_episode_steps,
+        )
+
+    def init_state(self, key: jax.Array) -> MountainCarState:
+        rng, sub = jax.random.split(key)
+        pos = jax.random.uniform(sub, (), jnp.float32, -0.6, -0.4)
+        z = jnp.float32(0.0)
+        return MountainCarState(
+            pos=pos, vel=jnp.float32(0.0), t=jnp.int32(0), rng=rng,
+            ep_return=z, reward_acc=z,
+        )
+
+    def substep(self, s: MountainCarState, action) -> MountainCarState:
+        vel = s.vel + (action - 1) * 0.001 - jnp.cos(3 * s.pos) * 0.0025
+        vel = jnp.clip(vel, -0.07, 0.07)
+        pos = jnp.clip(s.pos + vel, -1.2, 0.6)
+        vel = jnp.where((pos <= -1.2) & (vel < 0), 0.0, vel)
+        return s.replace(pos=pos, vel=vel, reward_acc=s.reward_acc - 1.0)
+
+    def terminal(self, s: MountainCarState) -> jnp.ndarray:
+        return (s.pos >= 0.5) & (s.vel >= 0.0)
+
+    def observe(self, s: MountainCarState) -> jnp.ndarray:
+        return jnp.stack([s.pos, s.vel]).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------- #
+# Pendulum (continuous control; dm_control-style row of paper Table 2)
+# --------------------------------------------------------------------- #
+@pytree_dataclass
+class PendulumState:
+    theta: jnp.ndarray
+    theta_dot: jnp.ndarray
+    t: jnp.ndarray
+    rng: jax.Array
+    ep_return: jnp.ndarray
+    reward_acc: jnp.ndarray
+
+
+class Pendulum(Environment):
+    MAX_SPEED = 8.0
+    MAX_TORQUE = 2.0
+    DT = 0.05
+    G = 10.0
+    M = 1.0
+    L = 1.0
+
+    def __init__(self, max_episode_steps: int = 200):
+        self.spec = EnvSpec(
+            name="Pendulum-v1",
+            obs_spec=ArraySpec((3,), jnp.float32, -8.0, 8.0),
+            act_spec=ArraySpec((1,), jnp.float32, -2.0, 2.0),
+            max_episode_steps=max_episode_steps,
+        )
+
+    def init_state(self, key: jax.Array) -> PendulumState:
+        rng, sub = jax.random.split(key)
+        init = jax.random.uniform(sub, (2,), jnp.float32, -1.0, 1.0)
+        z = jnp.float32(0.0)
+        return PendulumState(
+            theta=init[0] * jnp.pi, theta_dot=init[1], t=jnp.int32(0),
+            rng=rng, ep_return=z, reward_acc=z,
+        )
+
+    def substep(self, s: PendulumState, action) -> PendulumState:
+        u = jnp.clip(action[0], -self.MAX_TORQUE, self.MAX_TORQUE)
+        th_norm = ((s.theta + jnp.pi) % (2 * jnp.pi)) - jnp.pi
+        cost = th_norm**2 + 0.1 * s.theta_dot**2 + 0.001 * u**2
+        new_dot = s.theta_dot + (
+            3 * self.G / (2 * self.L) * jnp.sin(s.theta)
+            + 3.0 / (self.M * self.L**2) * u
+        ) * self.DT
+        new_dot = jnp.clip(new_dot, -self.MAX_SPEED, self.MAX_SPEED)
+        return s.replace(
+            theta=s.theta + new_dot * self.DT,
+            theta_dot=new_dot,
+            reward_acc=s.reward_acc - cost,
+        )
+
+    def terminal(self, s: PendulumState) -> jnp.ndarray:
+        return jnp.bool_(False)
+
+    def observe(self, s: PendulumState) -> jnp.ndarray:
+        return jnp.stack(
+            [jnp.cos(s.theta), jnp.sin(s.theta), s.theta_dot]
+        ).astype(jnp.float32)

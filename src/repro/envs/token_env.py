@@ -1,0 +1,93 @@
+"""Token environment: couples the LM architecture zoo (policy backbones)
+to the EnvPool engine for RL training — the role the engines play when the
+policy is a large model served Seed-RL style (DESIGN.md §4).
+
+Task: *noisy copy*. The env holds a hidden target sequence; the
+observation is a context window of (prompt, emitted-so-far) tokens; the
+agent earns +1 per correctly copied token.  Step cost grows with the
+number of tokens emitted so far — mimicking KV-cache-length-dependent
+generation cost, the exact long-tail structure LLM-RL pipelines see.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.specs import ArraySpec, EnvSpec
+from repro.envs.base import Environment
+from repro.utils.pytree import pytree_dataclass
+
+
+@pytree_dataclass
+class TokenEnvState:
+    target: jnp.ndarray    # (ep_len,) hidden tokens to copy
+    emitted: jnp.ndarray   # (ep_len,) tokens the agent produced
+    t: jnp.ndarray
+    rng: jax.Array
+    ep_return: jnp.ndarray
+    reward_acc: jnp.ndarray
+
+
+class TokenEnv(Environment):
+    def __init__(self, vocab: int = 256, ep_len: int = 32, ctx_len: int = 64):
+        self.vocab = vocab
+        self.ep_len = ep_len
+        self.ctx_len = ctx_len
+        self.spec = EnvSpec(
+            name="TokenEnv-copy-v0",
+            obs_spec=ArraySpec((ctx_len,), jnp.int32, 0, vocab - 1),
+            act_spec=ArraySpec((), jnp.int32, 0, vocab - 1),
+            max_episode_steps=ep_len,
+            min_cost=1,
+            max_cost=1 + ep_len // 8,
+        )
+
+    def init_state(self, key: jax.Array) -> TokenEnvState:
+        rng, sub = jax.random.split(key)
+        target = jax.random.randint(sub, (self.ep_len,), 0, self.vocab, jnp.int32)
+        z = jnp.float32(0.0)
+        return TokenEnvState(
+            target=target,
+            emitted=jnp.zeros((self.ep_len,), jnp.int32),
+            t=jnp.int32(0),
+            rng=rng,
+            ep_return=z,
+            reward_acc=z,
+        )
+
+    def substep(self, s: TokenEnvState, action) -> TokenEnvState:
+        # only the first substep mutates; later substeps model decode cost
+        is_first = s.reward_acc == 0.0
+        idx = jnp.clip(s.t, 0, self.ep_len - 1)
+        correct = (action == s.target[idx]).astype(jnp.float32)
+        emitted = jnp.where(
+            is_first, s.emitted.at[idx].set(action.astype(jnp.int32)), s.emitted
+        )
+        # tiny epsilon keeps reward_acc != 0 after the first substep
+        reward = jnp.where(is_first, correct + 1e-9, 0.0)
+        return s.replace(emitted=emitted, reward_acc=s.reward_acc + reward)
+
+    def step_cost(self, s: TokenEnvState, action) -> jnp.ndarray:
+        # decode cost grows with sequence position (KV-cache length)
+        return jnp.int32(1) + s.t // 8
+
+    def terminal(self, s: TokenEnvState) -> jnp.ndarray:
+        return s.t >= self.ep_len
+
+    def observe(self, s: TokenEnvState) -> jnp.ndarray:
+        # context window: prompt (target prefix visible one ahead) plus
+        # emitted history, right-aligned
+        obs = jnp.zeros((self.ctx_len,), jnp.int32)
+        half = self.ctx_len // 2
+        idx = jnp.clip(s.t, 0, self.ep_len - 1)
+        # the token to copy is revealed at a fixed slot
+        tgt_window = jax.lax.dynamic_slice(
+            jnp.pad(s.target, (half, half)), (idx,), (half,)
+        )
+        emit_window = jax.lax.dynamic_slice(
+            jnp.pad(s.emitted, (half, half)), (idx,), (half,)
+        )
+        obs = obs.at[:half].set(tgt_window)
+        obs = obs.at[half:].set(emit_window)
+        return obs

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the compute hot-spots (DESIGN.md §3):
+#   flash_attention/  train/prefill attention (online-softmax K/V sweep)
+#   decode_attention/ flash-decoding (KV-chunk partials + tiny combine)
+#   env_step/         the paper's env-execution hot loop on the VPU
+# Each has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
+# ref.py (pure-jnp oracle).  Validated in interpret mode on CPU; TPU is
+# the lowering target.

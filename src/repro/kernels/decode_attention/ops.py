@@ -1,0 +1,25 @@
+"""jit'd public wrapper for the flash-decoding kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_fwd
+from repro.kernels.decode_attention.ref import decode_attention_reference
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def decode_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, lengths: jnp.ndarray,
+    *, block_t: int = 512, interpret: bool = True,
+) -> jnp.ndarray:
+    """(B, H, D) query vs (B, Hkv, T, D) cache -> (B, H, D)."""
+    return decode_attention_fwd(
+        q, k, v, lengths, block_t=block_t, interpret=interpret
+    )
+
+
+__all__ = ["decode_attention", "decode_attention_reference"]

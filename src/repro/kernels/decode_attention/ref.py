@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for decode attention (one query token vs cache)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_reference(
+    q: jnp.ndarray,        # (B, H, D) — one new token per sequence
+    k: jnp.ndarray,        # (B, Hkv, T, D)
+    v: jnp.ndarray,        # (B, Hkv, T, D)
+    lengths: jnp.ndarray,  # (B,) valid cache lengths
+    sm_scale: float | None = None,
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / jnp.sqrt(float(D))
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bktd->bkgt", qg, k.astype(jnp.float32)) * scale
+    mask = jnp.arange(T)[None, :] < lengths[:, None]       # (B, T)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,103 @@
+"""Batched environment physics substep as a Pallas TPU kernel.
+
+THE paper's hot loop, TPU-adapted: EnvPool's C++ worker threads each step
+one env; here a (block_n, 28) tile of env states is resident in VMEM and
+the whole substep — joint dynamics, contact model, integration, reward —
+runs as 8-lane-wide VPU arithmetic, ``num_envs/block_n`` grid steps.  The
+multi-substep loop (``n_sub``) runs inside the kernel so intermediate
+states never touch HBM: per agent-step traffic is exactly one state tile
+read + one write (the paper's zero-copy StateBufferQueue property, now at
+the register level).
+
+Layout note: state is SoA (N, 28) with the 28 physics scalars in the minor
+(lane) dim; joints are 8-wide which packs two ants per 16-lane VPU subrow.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.env_step.ref import DT
+
+
+def _env_kernel(state_ref, action_ref, out_ref, reward_ref, *, n_sub: int):
+    s = state_ref[...].astype(jnp.float32)        # (block_n, 28)
+    a = jnp.clip(action_ref[...].astype(jnp.float32), -1.0, 1.0)
+
+    pos = s[:, 0:3]
+    vel = s[:, 3:6]
+    rot = s[:, 6:9]
+    ang = s[:, 9:12]
+    q = s[:, 12:20]
+    qd = s[:, 20:28]
+    reward = jnp.zeros((s.shape[0],), jnp.float32)
+
+    for _ in range(n_sub):  # unrolled: n_sub is small and static
+        qdd = 18.0 * a - 4.0 * q - 1.2 * qd
+        qd = qd + DT * qdd
+        q = jnp.clip(q + DT * qd, -1.2, 1.2)
+
+        hip, knee = q[:, 0::2], q[:, 1::2]
+        foot_h = pos[:, 2:3] - (0.2 * jnp.cos(hip) + 0.2 * jnp.cos(hip + knee))
+        contact = (foot_h < 0.05).astype(jnp.float32)
+        thrust = jnp.sum(contact * (-qd[:, 0::2]), axis=-1) * 0.08
+        normal = jnp.sum(
+            contact * jnp.maximum(0.05 - foot_h, 0.0), axis=-1
+        ) * 120.0
+
+        acc = jnp.stack(
+            [thrust, jnp.zeros_like(thrust), -9.81 + normal], axis=-1
+        )
+        vel = (vel + DT * acc) * 0.995
+        pos = pos + DT * vel
+        pos = jnp.concatenate(
+            [pos[:, :2], jnp.maximum(pos[:, 2:3], 0.1)], axis=-1
+        )
+
+        asym = contact[:, 0] + contact[:, 1] - contact[:, 2] - contact[:, 3]
+        ang = (ang + DT * jnp.stack(
+            [0.4 * asym, 0.2 * asym, jnp.zeros_like(asym)], axis=-1
+        )) * 0.98
+        rot = rot + DT * ang
+        reward = reward + vel[:, 0] * DT * 20 - 0.5 * jnp.sum(a * a, axis=-1) * DT + DT
+
+    out_ref[...] = jnp.concatenate([pos, vel, rot, ang, q, qd], axis=-1).astype(
+        out_ref.dtype
+    )
+    reward_ref[...] = reward.astype(reward_ref.dtype)
+
+
+def env_substep_batch(
+    state: jnp.ndarray,    # (N, 28)
+    action: jnp.ndarray,   # (N, 8)
+    *,
+    n_sub: int = 1,
+    block_n: int = 256,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    N = state.shape[0]
+    block_n = min(block_n, N)
+    if N % block_n:
+        raise ValueError(f"N={N} % block_n={block_n}")
+    kernel = functools.partial(_env_kernel, n_sub=n_sub)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, 28), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 8), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, 28), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, 28), state.dtype),
+            jax.ShapeDtypeStruct((N,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(state, action)

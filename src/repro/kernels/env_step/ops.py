@@ -1,0 +1,28 @@
+"""jit'd public wrapper for the batched env substep kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.env_step.kernel import env_substep_batch
+from repro.kernels.env_step.ref import (
+    env_substep_reference,
+    pack_state,
+    unpack_state,
+)
+
+
+@functools.partial(jax.jit, static_argnames=("n_sub", "block_n", "interpret"))
+def env_step(
+    state: jnp.ndarray, action: jnp.ndarray, *,
+    n_sub: int = 1, block_n: int = 256, interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    return env_substep_batch(
+        state, action, n_sub=n_sub, block_n=block_n, interpret=interpret
+    )
+
+
+__all__ = ["env_step", "env_substep_reference", "pack_state", "unpack_state"]

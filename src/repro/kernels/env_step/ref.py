@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the batched env physics substep kernel.
+
+This is exactly MujocoLike.substep vmapped over a flat state layout —
+the oracle the kernel must match bit-for-bit in f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+N_JOINTS = 8
+DT = 0.01
+
+
+def pack_state(pos, vel, rot, ang, q, qd) -> jnp.ndarray:
+    """(..., 3+3+3+3+8+8=28) flat state."""
+    return jnp.concatenate([pos, vel, rot, ang, q, qd], axis=-1)
+
+
+def unpack_state(s):
+    return s[..., 0:3], s[..., 3:6], s[..., 6:9], s[..., 9:12], s[..., 12:20], s[..., 20:28]
+
+
+def env_substep_reference(state: jnp.ndarray, action: jnp.ndarray
+                          ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """state: (N, 28), action: (N, 8) -> (new_state, reward (N,))."""
+    pos, vel, rot, ang, q, qd = unpack_state(state.astype(jnp.float32))
+    a = jnp.clip(action.astype(jnp.float32), -1.0, 1.0)
+
+    qdd = 18.0 * a - 4.0 * q - 1.2 * qd
+    qd = qd + DT * qdd
+    q = jnp.clip(q + DT * qd, -1.2, 1.2)
+
+    hip, knee = q[..., 0::2], q[..., 1::2]
+    foot_h = pos[..., 2:3] - (0.2 * jnp.cos(hip) + 0.2 * jnp.cos(hip + knee))
+    contact = (foot_h < 0.05).astype(jnp.float32)
+    hip_vel = qd[..., 0::2]
+    thrust = jnp.sum(contact * (-hip_vel), axis=-1) * 0.08
+    normal = jnp.sum(contact * jnp.maximum(0.05 - foot_h, 0.0), axis=-1) * 120.0
+
+    acc = jnp.stack(
+        [thrust, jnp.zeros_like(thrust), -9.81 + normal], axis=-1
+    )
+    vel = (vel + DT * acc) * 0.995
+    pos = pos + DT * vel
+    pos = pos.at[..., 2].set(jnp.maximum(pos[..., 2], 0.1))
+
+    asym = contact[..., 0] + contact[..., 1] - contact[..., 2] - contact[..., 3]
+    ang = (ang + DT * jnp.stack(
+        [0.4 * asym, 0.2 * asym, jnp.zeros_like(asym)], axis=-1
+    )) * 0.98
+    rot = rot + DT * ang
+
+    reward = vel[..., 0] * DT * 20 - 0.5 * jnp.sum(a * a, axis=-1) * DT + DT
+    return pack_state(pos, vel, rot, ang, q, qd), reward

@@ -1,0 +1,120 @@
+"""Flash attention Pallas TPU kernel (prefill/train path).
+
+TPU adaptation of the paper-era GPU flash algorithm (DESIGN.md hardware
+adaptation): the online-softmax K/V sweep is a ``fori_loop`` *inside* the
+kernel so the (block_q, D) query tile and f32 accumulators stay resident in
+VMEM/VREGs while K/V stream through in MXU-aligned (block_k, D) tiles —
+there is no shared-memory staging or warp-level reduction to port, the MXU
+consumes (128, 128) tiles directly.
+
+Grid: (B, H, Sq/block_q).  GQA is handled by an index-map trick: the K/V
+BlockSpec maps query-head h to kv-head h // group.  Causal + sliding-window
+masks are applied with block-level early-exit (blocks fully outside the
+mask are skipped, so SWA actually saves flops — unlike the XLA baseline
+which computes-then-masks).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, *,
+    block_k: int, sm_scale: float, causal: bool, window: int,
+    seq_q: int, seq_kv: int, block_q: int,
+):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale        # (block_q, D)
+    D = q.shape[-1]
+
+    q_base = qi * block_q + (seq_kv - seq_q)              # end-aligned
+    q_pos = q_base + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    n_kblocks = pl.cdiv(seq_kv, block_k)
+    if causal:
+        # last K block any query in this tile can see
+        hi = lax.min(
+            n_kblocks, pl.cdiv(q_base + block_q, block_k)
+        )
+    else:
+        hi = n_kblocks
+    if window:
+        lo = lax.max(0, (q_base - window + 1) // block_k)
+    else:
+        lo = 0
+
+    def body(ki, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(k_ref, (0, 0, pl.ds(ki * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, 0, pl.ds(ki * block_k, block_k), slice(None)))
+        s = q @ k.astype(jnp.float32).T                    # (block_q, block_k)
+        k_pos = ki * block_k + lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1
+        )
+        mask = k_pos < seq_kv
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[:, None] + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, D), jnp.float32)
+    m, l, acc = lax.fori_loop(lo, hi, body, (m0, l0, acc0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jnp.ndarray,   # (B, H, Sq, D)
+    k: jnp.ndarray,   # (B, Hkv, Skv, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, H, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = H // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(D)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    if Sq % block_q:
+        raise ValueError(f"Sq={Sq} % block_q={block_q}")
+
+    grid = (B, H, Sq // block_q)
+    kernel = functools.partial(
+        _flash_kernel, block_k=block_k, sm_scale=scale, causal=causal,
+        window=window, seq_q=Sq, seq_kv=Skv, block_q=block_q,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, Skv, D), lambda b, h, i: (b, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, Skv, D), lambda b, h, i: (b, h // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,29 @@
+"""jit'd public wrapper for the flash attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import mha_reference
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "interpret", "block_q", "block_k")
+)
+def flash_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+    causal: bool = True, window: int = 0,
+    block_q: int = 128, block_k: int = 128, interpret: bool = True,
+) -> jnp.ndarray:
+    """(B, H, Sq, D) x (B, Hkv, Skv, D) -> (B, H, Sq, D)."""
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+__all__ = ["flash_attention", "mha_reference"]

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_reference(
+    q: jnp.ndarray,       # (B, H, Sq, D)
+    k: jnp.ndarray,       # (B, Hkv, Skv, D)
+    v: jnp.ndarray,       # (B, Hkv, Skv, D)
+    causal: bool = True,
+    window: int = 0,
+    sm_scale: float | None = None,
+) -> jnp.ndarray:
+    B, H, Sq, D = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / jnp.sqrt(float(D))
+    qg = q.reshape(B, Hkv, G, Sq, D)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    Skv = k.shape[2]
+    qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)   # align ends (decode-style)
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = kpos <= qpos
+    if window:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)

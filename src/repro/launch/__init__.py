@@ -1,0 +1,9 @@
+# Lazy: must not import jax at package-import time (see repro/__init__.py).
+
+
+def __getattr__(name):
+    if name in ("make_production_mesh", "make_debug_mesh"):
+        from repro.launch import mesh
+
+        return getattr(mesh, name)
+    raise AttributeError(name)

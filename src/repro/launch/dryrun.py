@@ -1,0 +1,319 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (including
+# jax and repro.*) — jax locks the device count on first init.
+
+_DOC = """Multi-pod dry-run (harness contract).
+
+For one (arch × shape × mesh) cell:
+  jax.jit(step, in_shardings, out_shardings).lower(**specs).compile()
+then record memory_analysis(), cost_analysis(), and collective bytes
+parsed from the optimized HLO.  Success proves the distribution config is
+coherent; the numbers feed EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+      --shape train_4k [--multi-pod] [--rules baseline|seqpar] [--json out.json]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any
+
+import numpy as np
+
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",")]))
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_DEF_RE = re.compile(r"^\s*(%?[\w.\-]+)\s*=\s*((?:\([^=]*?\)|[a-z0-9]+\[[0-9,]*\][^\s]*))\s+([\w\-]+)\((.*)")
+
+
+def parse_collectives(hlo_text: str) -> dict[str, Any]:
+    """Sum operand bytes of every collective op in the (per-device) HLO.
+
+    Optimized HLO prints operands as bare names, so pass 1 builds a
+    name -> result-type map and pass 2 resolves collective operands."""
+    out = {k: {"count": 0, "operand_bytes": 0, "result_bytes": 0}
+           for k in COLLECTIVES}
+    name_type: dict[str, str] = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if m:
+            name_type[m.group(1).lstrip("%")] = m.group(2)
+
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        _, result_type, opname, rest = m.groups()
+        kind = None
+        for c in COLLECTIVES:
+            if opname == c or opname.startswith(c + "-start"):
+                kind = c
+                break
+        if kind is None or opname.endswith("-done"):
+            continue
+        out[kind]["count"] += 1
+        out[kind]["result_bytes"] += _type_bytes(result_type)
+        # operands: bare names or typed refs inside the call parens
+        paren = rest.split(")")[0]
+        op_bytes = _type_bytes(paren)
+        if op_bytes == 0:
+            for ref in re.findall(r"%?([\w.\-]+)", paren):
+                if ref in name_type:
+                    op_bytes += _type_bytes(name_type[ref])
+        out[kind]["operand_bytes"] += op_bytes
+    out["total_operand_bytes"] = sum(
+        v["operand_bytes"] for k, v in out.items() if isinstance(v, dict)
+    )
+    out["total_result_bytes"] = sum(
+        v["result_bytes"] for k, v in out.items() if isinstance(v, dict)
+    )
+    out["total_count"] = sum(
+        v["count"] for k, v in out.items() if isinstance(v, dict)
+    )
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, rules_name: str,
+             extra: dict[str, Any] | None = None) -> dict[str, Any]:
+    # imports deferred: XLA_FLAGS must be set before jax initializes
+    import jax
+    from repro.configs import get_config
+    from repro.distributed.sharding import (
+        BASELINE_RULES, DP_RULES, SP_RULES, ZERO1_RULES,
+    )
+    from repro.launch.mesh import (
+        HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh,
+    )
+    from repro.launch.steps import (
+        batch_shardings, cache_shardings, make_prefill_step, make_serve_step,
+        make_train_step, train_state_shapes, train_state_shardings,
+    )
+    from repro.models.api import SHAPES, build_model, cell_supported
+    from repro.models.common import model_flops_per_token
+    from repro.optim import adamw, constant
+
+    t0 = time.time()
+    extra = extra or {}
+    cfg = get_config(arch, **extra.get("config_overrides", {}))
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+
+    rules = {"baseline": BASELINE_RULES, "seqpar": SP_RULES,
+             "dp": DP_RULES, "zero1": ZERO1_RULES}[rules_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    model = build_model(cfg)
+    specs = model.input_specs(shape)
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    if shape.kind == "train":
+        opt = adamw()
+        step_fn = make_train_step(model, opt, constant(3e-4), mesh, rules,
+                                  microbatches=extra.get("microbatches", 1))
+        state_shape = train_state_shapes(model, opt)
+        state_sh = train_state_shardings(mesh, state_shape, rules)
+        batch_sh = batch_shardings(mesh, specs, rules)
+        with mesh:
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(state_sh, batch_sh),
+                donate_argnums=(0,),
+            ).lower(state_shape, specs)
+    elif shape.kind == "prefill":
+        step_fn = make_prefill_step(model, shape.seq_len, mesh, rules)
+        params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        from repro.distributed.sharding import param_shardings
+        params_sh = param_shardings(mesh, params_shape, rules)
+        batch_sh = batch_shardings(mesh, specs, rules)
+        with mesh:
+            lowered = jax.jit(
+                step_fn, in_shardings=(params_sh, batch_sh)
+            ).lower(params_shape, specs)
+    else:  # decode
+        step_fn = make_serve_step(model, mesh, rules)
+        params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        from repro.distributed.sharding import param_shardings
+        params_sh = param_shardings(mesh, params_shape, rules)
+        cache_shape = model.cache_specs(shape)
+        cache_sh = cache_shardings(mesh, cache_shape, rules)
+        batch_sh = batch_shardings(mesh, specs, rules)
+        with mesh:
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(params_sh, cache_sh, batch_sh),
+                donate_argnums=(1,),
+            ).lower(params_shape, cache_shape, specs)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    # ---- analyses -------------------------------------------------- #
+    cost = compiled.cost_analysis() or {}
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for f in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "alias_size_in_bytes",
+                  "temp_size_in_bytes"):
+            mem[f] = int(getattr(ma, f, 0))
+        mem["total_per_device"] = (
+            mem.get("argument_size_in_bytes", 0)
+            + mem.get("output_size_in_bytes", 0)
+            + mem.get("temp_size_in_bytes", 0)
+            - mem.get("alias_size_in_bytes", 0)
+        )
+    except Exception as e:  # CPU backend may not implement it
+        mem["error"] = str(e)
+
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+
+    # ---- roofline terms (seconds; harness formulas) ------------------ #
+    # RAW terms use the compiled artifact directly.  CAVEAT (documented in
+    # EXPERIMENTS.md): XLA-CPU cost_analysis counts scan/while bodies ONCE,
+    # so raw flops/bytes undercount by ~n_layers for scanned stacks.  The
+    # CORRECTED terms use the analytic cost model (distributed/analytic.py),
+    # cross-validated against unrolled small configs in tests.
+    from repro.distributed.analytic import cell_cost
+
+    compute_s_raw = flops_dev / PEAK_FLOPS_BF16
+    memory_s_raw = bytes_dev / HBM_BW
+    coll_global = coll["total_operand_bytes"] * n_dev
+    collective_s = coll_global / (n_dev * ICI_BW)
+
+    ac = cell_cost(cfg, shape, n_dev, rules_name)
+    compute_s = ac.flops_global / (n_dev * PEAK_FLOPS_BF16)
+    memory_s = ac.bytes_per_device / HBM_BW
+
+    # MODEL_FLOPS (6ND convention)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf_tok = model_flops_per_token(cfg)
+    if shape.kind != "train":
+        mf_tok = mf_tok / 3.0                          # forward only
+    model_flops = mf_tok * tokens
+    hlo_flops_global = flops_dev * n_dev
+
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "rules": rules_name,
+        "status": "ok",
+        "devices": n_dev,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "memory_analysis": mem,
+        "collectives": coll,
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "compute_s_raw_hlo": compute_s_raw,
+            "memory_s_raw_hlo": memory_s_raw,
+            "dominant": dominant,
+            "model_flops": model_flops,
+            "analytic_flops_global": ac.flops_global,
+            "analytic_bytes_per_device": ac.bytes_per_device,
+            "hlo_flops_global": hlo_flops_global,
+            "useful_flop_frac": (model_flops / ac.flops_global
+                                 if ac.flops_global else 0.0),
+            "step_time_bound_s": max(compute_s, memory_s, collective_s),
+            "mfu_bound": (model_flops / (n_dev * PEAK_FLOPS_BF16)
+                          / max(compute_s, memory_s, collective_s, 1e-12)),
+        },
+        "analytic_details": {k: float(v) for k, v in ac.details.items()},
+    }
+    if extra.get("keep_hlo"):
+        result["hlo_path"] = extra["keep_hlo"]
+        with open(extra["keep_hlo"], "w") as f:
+            f.write(hlo)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rules", default="baseline",
+                    choices=["baseline", "seqpar", "dp", "zero1"])
+    ap.add_argument("--json", default=None, help="write result JSON here")
+    ap.add_argument("--keep-hlo", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (e.g. remat=dots)")
+    args = ap.parse_args()
+
+    overrides: dict[str, Any] = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except Exception:
+            pass
+        overrides[k] = v
+
+    res = run_cell(
+        args.arch, args.shape, args.multi_pod, args.rules,
+        extra={"keep_hlo": args.keep_hlo, "microbatches": args.microbatches,
+               "config_overrides": overrides},
+    )
+    print(json.dumps(res, indent=2, default=str))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2, default=str)
+    sys.exit(0 if res["status"] in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

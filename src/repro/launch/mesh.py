@@ -1,0 +1,28 @@
+"""Production mesh construction (harness contract).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(devices: int | None = None):
+    """Tiny mesh over however many devices exist (tests)."""
+    n = devices or len(jax.devices())
+    model = 2 if n % 2 == 0 and n > 1 else 1
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# TPU v5e hardware model (roofline constants; harness spec)
+PEAK_FLOPS_BF16 = 197e12     # per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link

@@ -1,0 +1,221 @@
+"""pjit-ready train/serve step builders for every (arch × shape) cell.
+
+``make_train_step`` / ``make_serve_step`` return (fn, in_shardings,
+out_shardings, input_specs) so the dry-run, the trainer and the server all
+lower the exact same computation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (
+    BASELINE_RULES,
+    RuleSet,
+    make_shard_fn,
+    param_shardings,
+    resolve,
+)
+from repro.models.api import Model, ShapeSpec, vlm_patches
+from repro.optim.adamw import Optimizer
+from repro.utils.pytree import pytree_dataclass
+
+
+@pytree_dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jnp.ndarray
+
+
+# --------------------------------------------------------------------- #
+# logical axes of non-param trees
+# --------------------------------------------------------------------- #
+_BATCH_LOGICAL: dict[str, tuple[str | None, ...]] = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "loss_mask": ("batch", "seq"),
+    "frames": ("batch", "enc_seq", "embed"),
+    "patch_embeds": ("batch", None, "embed"),
+    "positions": ("batch", "seq", None),
+}
+
+
+def batch_shardings(mesh: Mesh, specs: dict[str, jax.ShapeDtypeStruct],
+                    rules: RuleSet) -> dict[str, NamedSharding]:
+    out = {}
+    for k, v in specs.items():
+        names = _BATCH_LOGICAL.get(k, (None,) * len(v.shape))
+        # the batch dim of inputs is never model-sharded even under SP rules
+        out[k] = NamedSharding(mesh, resolve(
+            mesh, v.shape, names, rules if k != "tokens" else rules
+        ))
+    return out
+
+
+def cache_logical(path, leaf) -> tuple[str | None, ...]:
+    keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    last = keys[-1] if keys else ""
+    if last in ("k", "v") and leaf.ndim == 5:
+        return ("layers", "batch", "kv_seq", "kv_heads", None)
+    if last in ("k_scale", "v_scale") and leaf.ndim == 4:
+        return ("layers", "batch", "kv_seq", "kv_heads")
+    if last in ("xk", "xv") and leaf.ndim == 5:
+        return ("layers", "batch", "enc_seq", "kv_heads", None)
+    if last == "ssm_h":
+        return ("layers", "batch", "mlp", None)
+    if last == "ssm_tail":
+        return ("layers", "batch", None, "mlp")
+    # xlstm recurrent states (inside "states" list)
+    if "states" in keys:
+        if leaf.ndim == 4:
+            return ("batch", "heads", None, None)
+        if leaf.ndim == 3:
+            return ("batch", "heads", None)
+        if leaf.ndim == 2:
+            return ("batch", None)
+    return (None,) * leaf.ndim
+
+
+def cache_shardings(mesh: Mesh, cache_shape: Any, rules: RuleSet) -> Any:
+    def one(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(
+            mesh, resolve(mesh, leaf.shape, cache_logical(path, leaf), rules)
+        )
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+# --------------------------------------------------------------------- #
+# train step
+# --------------------------------------------------------------------- #
+def make_train_step(
+    model: Model,
+    optimizer: Optimizer,
+    lr_fn: Callable,
+    mesh: Mesh | None = None,
+    rules: RuleSet = BASELINE_RULES,
+    microbatches: int = 1,
+):
+    """Returns pure ``train_step(state, batch) -> (state, metrics)``."""
+    shard = make_shard_fn(mesh, rules)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.train_loss(params, batch, shard=shard)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: dict[str, jnp.ndarray]):
+        if microbatches > 1:
+            def mb_slice(i, x):
+                mb = x.shape[0] // microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, 0)
+
+            def accum(carry, i):
+                gsum, lsum = carry
+                mb_batch = {k: mb_slice(i, v) for k, v in batch.items()}
+                (loss, _), grads = grad_fn(state.params, mb_batch)
+                gsum = jax.tree.map(jnp.add, gsum, grads)
+                return (gsum, lsum + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (gsum, lsum), _ = jax.lax.scan(
+                accum, (zeros, jnp.float32(0)), jnp.arange(microbatches)
+            )
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {"xent": loss, "aux": jnp.float32(0)}
+        else:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+
+        lr = lr_fn(state.step)
+        new_params, new_opt = optimizer.update(grads, state.opt, state.params, lr)
+        new_state = TrainState(params=new_params, opt=new_opt, step=state.step + 1)
+        metrics = dict(metrics)
+        metrics.update(loss=loss, lr=lr)
+        return new_state, metrics
+
+    return train_step
+
+
+def train_state_shapes(model: Model, optimizer: Optimizer) -> TrainState:
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt_shape = jax.eval_shape(optimizer.init, params_shape)
+    return TrainState(
+        params=params_shape, opt=opt_shape,
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def train_state_shardings(mesh: Mesh, state_shape: TrainState, rules: RuleSet
+                          ) -> TrainState:
+    if rules.name == "zero1":
+        from repro.distributed.sharding import opt_state_shardings
+
+        opt_sh = opt_state_shardings(mesh, state_shape.opt)
+    else:
+        opt_sh = param_shardings(mesh, state_shape.opt, rules)
+    return TrainState(
+        params=param_shardings(mesh, state_shape.params, rules),
+        opt=opt_sh,
+        step=NamedSharding(mesh, P()),
+    )
+
+
+# --------------------------------------------------------------------- #
+# serve steps
+# --------------------------------------------------------------------- #
+def make_serve_step(model: Model, mesh: Mesh | None = None,
+                    rules: RuleSet = BASELINE_RULES):
+    """decode: (params, cache, batch) -> (next_token, logits_sample, cache)."""
+    shard = make_shard_fn(mesh, rules)
+
+    def serve_step(params, cache, batch):
+        logits, cache = model.decode_step(
+            params, batch["tokens"], cache,
+            positions=batch.get("positions"), shard=shard,
+        )
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step
+
+
+def make_prefill_step(model: Model, seq_len: int, mesh: Mesh | None = None,
+                      rules: RuleSet = BASELINE_RULES):
+    shard = make_shard_fn(mesh, rules)
+
+    def prefill_step(params, batch):
+        logits_last, cache = model.prefill(params, batch, max_len=seq_len,
+                                           shard=shard)
+        next_tok = jnp.argmax(logits_last, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return prefill_step
+
+
+# --------------------------------------------------------------------- #
+# concrete batch makers (for real runs / benchmarks at small scale)
+# --------------------------------------------------------------------- #
+def synth_batch(model: Model, shape: ShapeSpec, key: jax.Array
+                ) -> dict[str, jnp.ndarray]:
+    specs = model.input_specs(shape)
+    batch = {}
+    for k, v in specs.items():
+        kk = jax.random.fold_in(key, hash(k) % (2**31))
+        if v.dtype == jnp.int32:
+            hi = model.cfg.vocab if k in ("tokens", "labels") else 4
+            batch[k] = jax.random.randint(kk, v.shape, 0, hi, jnp.int32)
+        else:
+            batch[k] = jax.random.normal(kk, v.shape, v.dtype) * 0.02
+    return batch

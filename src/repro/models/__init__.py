@@ -1,0 +1,14 @@
+from repro.models.api import SHAPES, Model, ShapeSpec, build_model, cell_supported
+from repro.models.common import ModelConfig, MoEConfig, SSMConfig, XLSTMConfig
+
+__all__ = [
+    "SHAPES",
+    "Model",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "ShapeSpec",
+    "XLSTMConfig",
+    "build_model",
+    "cell_supported",
+]

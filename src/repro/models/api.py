@@ -1,0 +1,242 @@
+"""Unified model API over all architecture families.
+
+``build_model(cfg)`` returns a ``Model`` exposing:
+  init / train_loss / prefill / decode_step / init_cache / input_specs
+so the launcher, dry-run, tests and benchmarks never dispatch on family.
+
+Shape cells (assignment): every arch pairs with train_4k / prefill_32k /
+decode_32k / long_500k.  ``decode_*``/``long_*`` lower ``serve_step`` (one
+new token against a filled KV/SSM cache), not ``train_step``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer, whisper, xlstm
+from repro.models.common import ModelConfig, ShardFn, no_shard
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str           # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# stub-frontend sizes (DESIGN.md §4: frontends are stubs; embeddings are inputs)
+VLM_PATCHES = 1024
+
+
+def vlm_patches(seq_len: int) -> int:
+    """Image-patch prefix length: 1024 at full shapes, scaled down for
+    short smoke sequences."""
+    return min(VLM_PATCHES, max(seq_len // 4, 1))
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Is (arch × shape) runnable? (DESIGN.md §4 skip rules)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k needs sub-quadratic attention state; " \
+                      f"{cfg.name} is full-attention"
+    return True, ""
+
+
+# --------------------------------------------------------------------- #
+# losses
+# --------------------------------------------------------------------- #
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Token-mean cross entropy; f32 accumulation."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# --------------------------------------------------------------------- #
+# the Model facade
+# --------------------------------------------------------------------- #
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -------------------------- init ------------------------------- #
+    def init(self, key: jax.Array) -> Any:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return whisper.whisper_init(key, cfg)
+        if cfg.family == "ssm":
+            return xlstm.xlstm_lm_init(key, cfg)
+        return transformer.lm_init(key, cfg)
+
+    # -------------------------- train ------------------------------ #
+    def train_loss(self, params: Any, batch: dict[str, jnp.ndarray],
+                   shard: ShardFn = no_shard) -> tuple[jnp.ndarray, dict]:
+        cfg = self.cfg
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.family == "encdec":
+            enc = whisper.encode(params, batch["frames"], cfg, shard)
+            logits, _ = whisper.decode(params, batch["tokens"], enc, cfg,
+                                       cache=None, shard=shard)
+        elif cfg.family == "ssm":
+            logits, _ = xlstm.xlstm_lm_apply(params, batch["tokens"], cfg,
+                                             state=None, shard=shard)
+        elif cfg.family == "vlm":
+            logits, _, aux = transformer.lm_apply(
+                params, batch["tokens"], cfg,
+                input_embeds=batch["patch_embeds"],
+                positions=batch["positions"],
+                shard=shard,
+            )
+            # loss only over the text region (after the patch prefix)
+            logits = logits[:, batch["patch_embeds"].shape[1]:]
+        else:
+            logits, _, aux = transformer.lm_apply(
+                params, batch["tokens"], cfg, shard=shard
+            )
+        loss = softmax_xent(logits, labels, mask)
+        total = loss + aux
+        return total, {"xent": loss, "aux": aux}
+
+    # -------------------------- serve ------------------------------ #
+    def init_cache(self, batch: int, max_len: int) -> Any:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return whisper.init_whisper_cache(cfg, batch, max_len)
+        if cfg.family == "ssm":
+            # per-layer recurrent states
+            states = []
+            for kind in xlstm.xlstm_block_kinds(cfg):
+                if kind == "mlstm":
+                    di = int(cfg.xlstm.proj_factor * cfg.d_model)
+                    dh = di // cfg.n_heads
+                    states.append((
+                        jnp.zeros((batch, cfg.n_heads, dh, dh), cfg.compute_dtype),
+                        jnp.zeros((batch, cfg.n_heads, dh), cfg.compute_dtype),
+                    ))
+                else:
+                    z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+                    states.append((z, z, z, z))
+            return {"states": states, "len": jnp.zeros((), jnp.int32)}
+        return transformer.init_cache(cfg, batch, max_len)
+
+    def prefill(self, params: Any, batch: dict[str, jnp.ndarray], max_len: int,
+                shard: ShardFn = no_shard) -> tuple[jnp.ndarray, Any]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        cache = self.init_cache(B, max_len)
+        if cfg.family == "encdec":
+            enc = whisper.encode(params, batch["frames"], cfg, shard)
+            logits, cache = whisper.decode(params, tokens, enc, cfg, cache, shard)
+        elif cfg.family == "ssm":
+            logits, states = xlstm.xlstm_lm_apply(
+                params, tokens, cfg, state=None, shard=shard
+            )
+            cache = {"states": states, "len": jnp.int32(tokens.shape[1])}
+        elif cfg.family == "vlm":
+            logits, cache, _ = transformer.lm_apply(
+                params, tokens, cfg,
+                input_embeds=batch.get("patch_embeds"),
+                positions=batch.get("positions"),
+                cache=cache, shard=shard,
+            )
+        else:
+            logits, cache, _ = transformer.lm_apply(
+                params, tokens, cfg, cache=cache, shard=shard
+            )
+        return logits[:, -1], cache
+
+    def decode_step(self, params: Any, tokens: jnp.ndarray, cache: Any,
+                    positions: jnp.ndarray | None = None,
+                    shard: ShardFn = no_shard) -> tuple[jnp.ndarray, Any]:
+        """tokens: (B, 1) -> (logits (B, V), new cache)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            logits, cache = whisper.decode(params, tokens, None, cfg, cache, shard)
+        elif cfg.family == "ssm":
+            logits, states = xlstm.xlstm_lm_apply(
+                params, tokens, cfg, state=cache["states"], shard=shard
+            )
+            cache = {"states": states, "len": cache["len"] + 1}
+        else:
+            logits, cache, _ = transformer.lm_apply(
+                params, tokens, cfg, positions=positions, cache=cache, shard=shard
+            )
+        return logits[:, -1], cache
+
+    # -------------------------- specs ------------------------------ #
+    def input_specs(self, shape: ShapeSpec) -> dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell —
+        weak-type-correct, shardable, zero allocation (dry-run contract)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+
+        def tok(*s):
+            return jax.ShapeDtypeStruct(s, i32)
+
+        if shape.kind == "train":
+            if cfg.family == "encdec":
+                return {
+                    "frames": jax.ShapeDtypeStruct(
+                        (B, cfg.enc_seq, cfg.d_model), cfg.compute_dtype
+                    ),
+                    "tokens": tok(B, S),
+                    "labels": tok(B, S),
+                }
+            if cfg.family == "vlm":
+                P = vlm_patches(S)
+                return {
+                    "tokens": tok(B, S - P),
+                    "patch_embeds": jax.ShapeDtypeStruct(
+                        (B, P, cfg.d_model), cfg.compute_dtype
+                    ),
+                    "positions": jax.ShapeDtypeStruct((B, S, 3), i32),
+                    "labels": tok(B, S - P),
+                }
+            return {"tokens": tok(B, S), "labels": tok(B, S)}
+        if shape.kind == "prefill":
+            specs = {"tokens": tok(B, S)}
+            if cfg.family == "encdec":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.enc_seq, cfg.d_model), cfg.compute_dtype
+                )
+            if cfg.family == "vlm":
+                specs["positions"] = jax.ShapeDtypeStruct((B, S, 3), i32)
+            return specs
+        # decode: one new token against a seq_len cache
+        specs = {"tokens": tok(B, 1)}
+        if cfg.family == "vlm":
+            specs["positions"] = jax.ShapeDtypeStruct((B, 1, 3), i32)
+        return specs
+
+    def cache_specs(self, shape: ShapeSpec) -> Any:
+        """ShapeDtypeStructs of the cache for decode cells."""
+        cache = jax.eval_shape(
+            lambda: self.init_cache(shape.global_batch, shape.seq_len)
+        )
+        return cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

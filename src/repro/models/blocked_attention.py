@@ -1,0 +1,157 @@
+"""Blocked attention on the pure-XLA path (§Perf optimization).
+
+The baseline ``mha`` materializes (B, H, S, S) f32 scores — 214 GB/layer
+for hymba's prefill_32k — and computes masked-out positions anyway.  Two
+blocked implementations fix both, with the same interface as ``mha``:
+
+  * ``banded_attention`` — sliding-window layers: each query block gathers
+    only its (window + block) K/V slice.  FLOPs drop from S² to
+    S·(W+bq); peak memory to one (bq, W+bq) tile per lane.
+  * ``online_causal_attention`` — full-causal layers: flash-style online
+    softmax over K/V blocks with a ``fori_loop`` whose trip count stops at
+    the diagonal.  FLOPs = true causal half; peak memory one (bq, bk)
+    tile.
+
+Both are pure jnp/lax (they ARE the XLA analogue of the Pallas
+flash_attention kernel, for the dry-run/roofline path where interpret-mode
+Pallas would distort cost analysis).  Oracle: kernels/flash_attention/ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def _gqa_expand(q: jnp.ndarray, Hkv: int) -> jnp.ndarray:
+    """(B, S, Hq, D) -> (B*Hkv, G, S, D) grouped lanes."""
+    B, S, Hq, D = q.shape
+    G = Hq // Hkv
+    return q.reshape(B, S, Hkv, G, D).transpose(0, 2, 3, 1, 4).reshape(
+        B * Hkv, G, S, D
+    )
+
+
+def banded_attention(
+    q: jnp.ndarray,   # (B, S, Hq, D)
+    k: jnp.ndarray,   # (B, S, Hkv, D)
+    v: jnp.ndarray,
+    window: int,
+    block_q: int = 512,
+    sm_scale: float | None = None,
+) -> jnp.ndarray:
+    """Causal sliding-window attention; computes only the band."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    scale = sm_scale if sm_scale is not None else 1.0 / jnp.sqrt(float(D))
+    bq = min(block_q, S)
+    assert S % bq == 0, (S, bq)
+    nq = S // bq
+    W = min(window, S)
+    span = W + bq  # kv slice covering the block's band
+
+    # tiles stay in the input dtype until sliced — collectives (when the
+    # seq axis is sharded) move bf16, not f32; accumulation is f32 per tile
+    qg = _gqa_expand(q, Hkv)                               # (BK, G, S, D)
+    kg = _gqa_expand(k, Hkv)[:, 0]                         # (BK, S, D)
+    vg = _gqa_expand(v, Hkv)[:, 0]
+    # pad kv at the front so every band slice is in-bounds
+    kp = jnp.pad(kg, ((0, 0), (W, 0), (0, 0)))
+    vp = jnp.pad(vg, ((0, 0), (W, 0), (0, 0)))
+
+    def one_block(i):
+        q_blk = lax.dynamic_slice_in_dim(qg, i * bq, bq, axis=2).astype(
+            jnp.float32) * scale                             # (BK,G,bq,D)
+        k_blk = lax.dynamic_slice_in_dim(kp, i * bq, span, axis=1).astype(
+            jnp.float32)
+        v_blk = lax.dynamic_slice_in_dim(vp, i * bq, span, axis=1).astype(
+            jnp.float32)
+        s = jnp.einsum("bgqd,bkd->bgqk", q_blk, k_blk)       # (BK,G,bq,span)
+        qpos = i * bq + lax.broadcasted_iota(jnp.int32, (bq, span), 0)
+        kpos = i * bq - W + lax.broadcasted_iota(jnp.int32, (bq, span), 1)
+        mask = (kpos >= 0) & (kpos <= qpos) & (kpos > qpos - W)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bgqk,bkd->bgqd", p, v_blk)
+
+    out = lax.map(one_block, jnp.arange(nq))                # (nq,BK,G,bq,D)
+    out = out.transpose(1, 2, 0, 3, 4).reshape(B, Hkv, Hq // Hkv, S, D)
+    out = out.reshape(B, Hq, S, D).transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)
+
+
+def online_causal_attention(
+    q: jnp.ndarray,   # (B, S, Hq, D)
+    k: jnp.ndarray,   # (B, S, Hkv, D)
+    v: jnp.ndarray,
+    block_q: int = 512,
+    block_k: int = 512,
+    sm_scale: float | None = None,
+    differentiable: bool = False,
+) -> jnp.ndarray:
+    """Full causal attention, flash-style online softmax, O(S·bk) memory.
+    Inference: a fori_loop stops at the diagonal (true causal-half FLOPs).
+    Train (``differentiable=True``): reverse-mode AD forbids dynamic loop
+    bounds, so a fixed-trip scan covers all K/V blocks with masking — the
+    memory win stands, the above-diagonal flops are paid (noted in the
+    analytic model)."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    scale = sm_scale if sm_scale is not None else 1.0 / jnp.sqrt(float(D))
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    assert S % bq == 0 and S % bk == 0
+    nq = S // bq
+
+    qg = _gqa_expand(q, Hkv)
+    kg = _gqa_expand(k, Hkv)[:, 0]                          # (BK, S, D)
+    vg = _gqa_expand(v, Hkv)[:, 0]
+    BK, G = qg.shape[0], qg.shape[1]
+
+    def one_block(i):
+        q_blk = lax.dynamic_slice_in_dim(qg, i * bq, bq, axis=2).astype(
+            jnp.float32) * scale
+
+        def body(j, carry):
+            m, l, acc = carry
+            k_blk = lax.dynamic_slice_in_dim(kg, j * bk, bk, axis=1).astype(
+                jnp.float32)
+            v_blk = lax.dynamic_slice_in_dim(vg, j * bk, bk, axis=1).astype(
+                jnp.float32)
+            s = jnp.einsum("bgqd,bkd->bgqk", q_blk, k_blk)
+            qpos = i * bq + lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = j * bk + lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where((kpos <= qpos)[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bgqk,bkd->bgqd", p, v_blk
+            )
+            return m_new, l_new, acc_new
+
+        m0 = jnp.full((BK, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((BK, G, bq), jnp.float32)
+        a0 = jnp.zeros((BK, G, bq, D), jnp.float32)
+        if differentiable:
+            def scan_body(carry, j):
+                return body(j, carry), None
+            (m, l, acc), _ = lax.scan(
+                scan_body, (m0, l0, a0), jnp.arange(S // bk)
+            )
+        else:
+            # blocks j = 0 .. ceil((i+1)*bq / bk) - 1 (stop at the diagonal)
+            hi = (i * bq + bq + bk - 1) // bk
+            m, l, acc = lax.fori_loop(0, hi, body, (m0, l0, a0))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = lax.map(one_block, jnp.arange(nq))
+    out = out.transpose(1, 2, 0, 3, 4).reshape(B, Hkv, Hq // Hkv, S, D)
+    out = out.reshape(B, Hq, S, D).transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)

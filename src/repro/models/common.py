@@ -1,0 +1,161 @@
+"""Model configuration and parameter-initialization substrate.
+
+Pure-JAX (no flax): parameters are nested dicts of arrays; every layer is
+a pair of functions ``init(key, cfg) -> params`` / ``apply(params, x, ...)``.
+Homogeneous decoder stacks store layer parameters STACKED along a leading
+``layers`` axis and run under ``lax.scan`` — one layer traced once, which
+bounds HLO size for the 80-layer dry-run configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+ShardFn = Callable[[jnp.ndarray, tuple[str | None, ...]], jnp.ndarray]
+
+
+def no_shard(x: jnp.ndarray, names: tuple[str | None, ...]) -> jnp.ndarray:
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-style selective SSM branch (hymba's parallel heads)."""
+
+    state_dim: int = 16
+    conv_width: int = 4
+    expand: int = 1          # d_inner = expand * d_model
+    chunk: int = 256         # chunked scan for memory
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    slstm_every: int = 8     # xLSTM[7:1]
+    slstm_offset: int = 7
+    chunk: int = 256
+    proj_factor: float = 2.0  # mLSTM up-projection
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str              # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    qk_norm: bool = False
+    mlp_type: str = "swiglu"         # swiglu | gelu
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm
+    rope_theta: float = 1_000_000.0
+    rope_type: str = "standard"      # standard | mrope | none
+    mrope_sections: tuple[int, ...] = (16, 24, 24)
+    attn_type: str = "full"          # full | sliding
+    window: int = 1024
+    global_attn_layers: tuple[int, ...] = ()   # hybrid: these layers use full attn
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    xlstm: XLSTMConfig | None = None
+    enc_layers: int = 0              # encdec: encoder depth
+    enc_seq: int = 1500              # stub frontend sequence (frames/patches)
+    frontend: str | None = None      # audio | vision (STUB: precomputed embeds)
+    tie_embeddings: bool = False
+    max_seq: int = 8192
+    # numerics
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    # execution
+    scan_layers: bool = True
+    remat: str = "full"              # none | full | dots
+    use_pallas: bool = False         # Pallas kernels (tests/bench); XLA path for dry-run
+    windowed_cache: bool = False     # ring-buffer KV cache for sliding-window layers
+    attn_impl: str = "dense"         # dense | blocked  (§Perf: banded/online-softmax)
+    kv_cache_dtype: str = "bf16"     # bf16 | int8      (§Perf: quantized KV cache)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.hd
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.hd
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch decode against a 500k context? (DESIGN.md §4)"""
+        if self.family == "ssm":
+            return True
+        if self.family == "hybrid" and self.attn_type == "sliding":
+            return True
+        return False
+
+    def replace(self, **kw: Any) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# --------------------------------------------------------------------- #
+# initializers
+# --------------------------------------------------------------------- #
+def dense_init(key: jax.Array, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def stack_layer_init(
+    init_fn: Callable[[jax.Array], Any], key: jax.Array, n_layers: int
+) -> Any:
+    """Initialize ``n_layers`` copies of a layer, stacked on axis 0 (for scan)."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_fn)(keys)
+
+
+def count_params(params: Any) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params) if hasattr(p, "size"))
+
+
+def model_flops_per_token(cfg: ModelConfig) -> float:
+    """MODEL_FLOPS/token ≈ 6·N_active (+ attention window term is reported
+    separately in the roofline; this is the 6ND convention)."""
+    d, ff = cfg.d_model, cfg.d_ff
+    attn = cfg.d_model * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * cfg.d_model
+    if cfg.mlp_type == "swiglu":
+        mlp = 3 * d * ff
+    else:
+        mlp = 2 * d * ff
+    if cfg.moe is not None:
+        mlp = mlp * cfg.moe.top_k + d * cfg.moe.num_experts  # router
+    per_layer = attn + mlp
+    if cfg.ssm is not None:  # parallel SSM branch
+        di = cfg.ssm.expand * d
+        per_layer += 2 * d * di + di * d + di * cfg.ssm.state_dim * 3
+    total = cfg.n_layers * per_layer
+    if cfg.enc_layers:
+        enc = cfg.enc_layers * (attn + mlp)
+        total += enc  # encoder runs once per sequence
+        total += cfg.n_layers * (cfg.d_model * (cfg.q_dim + 2 * cfg.kv_dim))  # cross-attn
+    total += cfg.d_model * cfg.vocab  # lm head
+    return 6.0 * total  # fwd (2x) + bwd (4x) per param-MAC convention

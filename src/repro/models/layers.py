@@ -1,0 +1,369 @@
+"""Core transformer layers: norms, RoPE/M-RoPE, GQA attention (train /
+prefill / decode with KV cache), dense MLPs.
+
+All functions are pure; sharding is injected via an optional ``shard``
+callback mapping logical axis names to ``with_sharding_constraint``
+(distributed/sharding.py supplies the real one; models never import mesh
+state).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ShardFn, dense_init, no_shard
+
+# --------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------- #
+def norm_init(key: jax.Array, d: int, cfg: ModelConfig) -> dict[str, jnp.ndarray]:
+    p = {"scale": jnp.ones((d,), cfg.param_dtype)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.param_dtype)
+    return p
+
+
+def apply_norm(p: dict[str, jnp.ndarray], x: jnp.ndarray, cfg: ModelConfig
+               ) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rms_head_norm(scale: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """qk-norm: RMSNorm over the head_dim of q/k (qwen3)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + 1e-6) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# RoPE / M-RoPE
+# --------------------------------------------------------------------- #
+def rope_freqs(cfg: ModelConfig) -> jnp.ndarray:
+    half = cfg.hd // 2
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, cfg: ModelConfig
+               ) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) int or (B, S, 3) for M-RoPE."""
+    if cfg.rope_type == "none":
+        return x
+    half = cfg.hd // 2
+    inv = rope_freqs(cfg)  # (half,)
+    if cfg.rope_type == "mrope":
+        # qwen2-vl: the half-dim is split into sections driven by the
+        # (t, h, w) components of the 3D position id.
+        assert positions.ndim == 3, "mrope needs (B,S,3) position ids"
+        secs = cfg.mrope_sections
+        assert sum(secs) == half, (secs, half)
+        sec_id = jnp.repeat(
+            jnp.arange(len(secs)), jnp.array(secs), total_repeat_length=half
+        )  # (half,) in {0,1,2}
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(sec_id[None, None, :], positions.shape[:2] + (half,)).astype(jnp.int32),
+            axis=2,
+        )  # (B, S, half)
+        angles = pos * inv[None, None, :]
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * inv  # (B, S, half)
+    sin = jnp.sin(angles)[:, :, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------- #
+def attn_init(key: jax.Array, cfg: ModelConfig) -> dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p = {
+        "wq": dense_init(ks[0], d, cfg.q_dim, cfg.param_dtype),
+        "wk": dense_init(ks[1], d, cfg.kv_dim, cfg.param_dtype),
+        "wv": dense_init(ks[2], d, cfg.kv_dim, cfg.param_dtype),
+        "wo": dense_init(ks[3], cfg.q_dim, d, cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.hd,), cfg.param_dtype)
+        p["k_norm"] = jnp.ones((cfg.hd,), cfg.param_dtype)
+    return p
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q: (B,S,Hq,D), k: (B,T,Hkv,D) -> scores (B,Hq,S,T) via GQA groups."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, D)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k)
+    return s.reshape(B, Hkv * G, S, k.shape[1])
+
+
+def _gqa_out(w: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """w: (B,Hq,S,T), v: (B,T,Hkv,D) -> (B,S,Hq,D)."""
+    B, Hq, S, T = w.shape
+    Hkv, D = v.shape[2], v.shape[3]
+    G = Hq // Hkv
+    wg = w.reshape(B, Hkv, G, S, T)
+    o = jnp.einsum("bkgst,btkd->bskgd", wg, v)
+    return o.reshape(B, S, Hq, D)
+
+
+def mha(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mask: jnp.ndarray | None,
+    cfg: ModelConfig,
+) -> jnp.ndarray:
+    """Masked GQA attention, f32 softmax. q:(B,S,Hq,D) k,v:(B,T,Hkv,D)."""
+    scores = _gqa_scores(q, k).astype(jnp.float32) / jnp.sqrt(float(cfg.hd))
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return _gqa_out(w, v)
+
+
+def causal_mask(S: int, T: int, offset: int = 0) -> jnp.ndarray:
+    """(1,1,S,T) causal mask; query i attends keys j <= i + offset."""
+    qpos = jnp.arange(S)[:, None] + offset
+    kpos = jnp.arange(T)[None, :]
+    return (kpos <= qpos)[None, None]
+
+
+def sliding_mask(S: int, T: int, window: int, offset: int = 0) -> jnp.ndarray:
+    qpos = jnp.arange(S)[:, None] + offset
+    kpos = jnp.arange(T)[None, :]
+    return ((kpos <= qpos) & (kpos > qpos - window))[None, None]
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, layers: int,
+                  window: int | None = None) -> dict[str, jnp.ndarray]:
+    """Pre-allocated KV cache. ``window`` caps the length for ring-buffer
+    sliding-window layers (cfg.windowed_cache perf path).  With
+    ``kv_cache_dtype='int8'`` (§Perf) entries are stored int8 with one f32
+    scale per (position, kv_head) — cache HBM traffic halves vs bf16."""
+    L = min(max_len, window) if window else max_len
+    shape = (layers, batch, L, cfg.n_kv_heads, cfg.hd)
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:-1], jnp.float32),
+            "v_scale": jnp.zeros(shape[:-1], jnp.float32),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros(shape, cfg.compute_dtype),
+        "v": jnp.zeros(shape, cfg.compute_dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def _quant_kv(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(B,S,Hkv,D) -> int8 values + (B,S,Hkv) f32 scales."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-9
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+            ).astype(dtype)
+
+
+def attention(
+    p: dict[str, Any],
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    *,
+    layer_window: jnp.ndarray | None = None,   # traced per-layer window (0 = full)
+    cache_kv: tuple[jnp.ndarray, jnp.ndarray] | None = None,  # (k,v) this layer
+    cache_scales: tuple[jnp.ndarray, jnp.ndarray] | None = None,  # int8 cache
+    cache_len: jnp.ndarray | None = None,
+    shard: ShardFn = no_shard,
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray] | None]:
+    """GQA attention.
+
+    * train:   cache_kv None            -> full causal/SWA over x itself
+    * prefill: cache_kv zeros, len 0    -> causal over x, cache filled
+    * decode:  cache_kv holds history, x is (B,1,d), len = #valid entries
+    Returns (out, updated (k,v) or None).
+    """
+    B, S, _ = x.shape
+    cd = cfg.compute_dtype
+    q = (x @ p["wq"].astype(cd)).reshape(B, S, cfg.n_heads, cfg.hd)
+    k = (x @ p["wk"].astype(cd)).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = (x @ p["wv"].astype(cd)).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q)
+        k = rms_head_norm(p["k_norm"], k)
+    q = apply_rope(q, positions, cfg)
+    k = apply_rope(k, positions, cfg)
+    q = shard(q, ("batch", "seq", "heads", None))
+    k = shard(k, ("batch", "seq", "kv_heads", None))
+    v = shard(v, ("batch", "seq", "kv_heads", None))
+
+    # window resolution: static int (0 = full) vs traced per-layer scalar
+    # (scan mode — dense impl only, both masks selected at runtime)
+    import numpy as _np
+    if cfg.attn_type != "sliding":
+        win_static, win_traced = 0, None
+    elif layer_window is None:
+        win_static, win_traced = cfg.window, None
+    elif isinstance(layer_window, (int, _np.integer)):
+        win_static, win_traced = int(layer_window), None
+    else:
+        win_static, win_traced = cfg.window, layer_window
+    window = cfg.window if cfg.attn_type == "sliding" else 0
+
+    use_blocked = (
+        cfg.attn_impl == "blocked" and S > 1 and win_traced is None
+    )
+
+    if cache_kv is None:
+        if use_blocked:
+            out = _blocked_self_attention(q, k, v, win_static, cfg,
+                                          differentiable=True)
+            return _attn_out(p, out, B, S, cfg, shard), None
+        # dense train path: self-attention over x, masked scores
+        base = causal_mask(S, S)
+        if cfg.attn_type == "sliding":
+            swa = sliding_mask(S, S, cfg.window)
+            if win_traced is not None:
+                mask = jnp.where(win_traced > 0, swa, base)
+            elif win_static:
+                mask = sliding_mask(S, S, win_static)
+            else:
+                mask = base
+        else:
+            mask = base
+        out = mha(q, k, v, mask, cfg)
+        new_kv = None
+    else:
+        ck, cv = cache_kv  # (B, L, Hkv, D)
+        L = ck.shape[1]
+        if cache_scales is not None:
+            # §Perf int8 cache: store quantized, dequantize at use — cache
+            # HBM traffic ~halves (1B values + per-row scales vs 2B)
+            k_sc, v_sc = cache_scales
+            kq, ks_new = _quant_kv(k)
+            vq, vs_new = _quant_kv(v)
+            ck = jax.lax.dynamic_update_slice(ck, kq, (0, cache_len, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, vq, (0, cache_len, 0, 0))
+            k_sc = jax.lax.dynamic_update_slice(k_sc, ks_new, (0, cache_len, 0))
+            v_sc = jax.lax.dynamic_update_slice(v_sc, vs_new, (0, cache_len, 0))
+            ckf = _dequant_kv(ck, k_sc, cd)
+            cvf = _dequant_kv(cv, v_sc, cd)
+            qpos = cache_len + jnp.arange(S)[:, None]
+            kpos = jnp.arange(L)[None, :]
+            valid = kpos <= qpos
+            if window and win_traced is None and win_static:
+                valid = valid & (kpos > qpos - win_static)
+            out = mha(q, ckf, cvf, valid[None, None], cfg)
+            out = _attn_out(p, out, B, S, cfg, shard)
+            return out, (ck, cv, k_sc, v_sc)
+        if cfg.windowed_cache and window and window < L:
+            # ring-buffer cache (decode-only fast path; prefill uses the
+            # full cache). write slot wraps modulo the window.
+            assert S == 1, "windowed_cache supports single-token decode only"
+            write_idx = cache_len % L
+            ck = jax.lax.dynamic_update_slice(ck, k, (0, write_idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v, (0, write_idx, 0, 0))
+            kpos = jnp.arange(L)[None, :]
+            valid = kpos < jnp.minimum(cache_len + 1, L)  # (1, L)
+            mask = valid[None, None]  # (1,1,1,L)
+        else:
+            ck = jax.lax.dynamic_update_slice(ck, k, (0, cache_len, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v, (0, cache_len, 0, 0))
+            if use_blocked and S == L:
+                # prefill-from-scratch fast path (cache_len == 0 by the
+                # Model.prefill contract): blocked attention over x itself
+                out = _blocked_self_attention(q, k, v, win_static, cfg)
+                out = _attn_out(p, out, B, S, cfg, shard)
+                return out, (ck, cv)
+            qpos = cache_len + jnp.arange(S)[:, None]   # (S,1)
+            kpos = jnp.arange(L)[None, :]               # (1,L)
+            valid = kpos <= qpos                        # causal incl. history
+            if window:
+                in_win = kpos > qpos - window
+                if win_traced is not None:
+                    valid = valid & jnp.where(win_traced > 0, in_win, True)
+                elif win_static:
+                    valid = valid & (kpos > qpos - win_static)
+            mask = valid[None, None]  # (1,1,S,L)
+        out = mha(q, ck, cv, mask, cfg)
+        new_kv = (ck, cv)
+
+    out = _attn_out(p, out, B, S, cfg, shard)
+    return out, new_kv
+
+
+def _attn_out(p, out, B, S, cfg, shard):
+    cd = cfg.compute_dtype
+    out = out.reshape(B, S, cfg.q_dim)
+    out = out @ p["wo"].astype(cd)
+    return shard(out, ("batch", "seq", "embed"))
+
+
+def _blocked_self_attention(q, k, v, win_static: int, cfg: ModelConfig,
+                            differentiable: bool = False):
+    """§Perf blocked path: banded for sliding layers, online-softmax for
+    full-causal — returns (B, S, Hq, D)."""
+    from repro.models.blocked_attention import (
+        banded_attention,
+        online_causal_attention,
+    )
+
+    if win_static and win_static < q.shape[1]:
+        return banded_attention(q, k, v, win_static)
+    return online_causal_attention(q, k, v, differentiable=differentiable)
+
+
+# --------------------------------------------------------------------- #
+# MLP
+# --------------------------------------------------------------------- #
+def mlp_init(key: jax.Array, cfg: ModelConfig, d_ff: int | None = None
+             ) -> dict[str, jnp.ndarray]:
+    ks = jax.random.split(key, 3)
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_type == "swiglu":
+        return {
+            "wi": dense_init(ks[0], d, ff, cfg.param_dtype),
+            "wg": dense_init(ks[1], d, ff, cfg.param_dtype),
+            "wo": dense_init(ks[2], ff, d, cfg.param_dtype),
+        }
+    return {
+        "wi": dense_init(ks[0], d, ff, cfg.param_dtype),
+        "wo": dense_init(ks[2], ff, d, cfg.param_dtype),
+    }
+
+
+def apply_mlp(p: dict[str, jnp.ndarray], x: jnp.ndarray, cfg: ModelConfig,
+              shard: ShardFn = no_shard) -> jnp.ndarray:
+    cd = cfg.compute_dtype
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(cd)) * (x @ p["wi"].astype(cd))
+    else:
+        h = jax.nn.gelu(x @ p["wi"].astype(cd))
+    h = shard(h, ("batch", "seq", "mlp"))
+    return shard(h @ p["wo"].astype(cd), ("batch", "seq", "embed"))

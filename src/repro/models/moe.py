@@ -1,0 +1,112 @@
+"""Mixture-of-Experts FFN with top-k capacity routing (dbrx / granite).
+
+GShard-style *grouped* dispatch: the batch dimension is the routing group,
+so cumulative-count positions and capacity are computed per group — no
+sequential dependency ever crosses the data-sharded token axis.  The
+dispatch buffer is ``(B, E, C, d)`` with B sharded over the data axes and
+E over the model axis (expert parallelism); XLA inserts the all-to-alls.
+Overflow beyond capacity C is dropped (capacity_factor controls slack),
+matching the paper-standard dropping MoE.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ShardFn, dense_init, no_shard
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig) -> dict[str, Any]:
+    assert cfg.moe is not None
+    E = cfg.moe.num_experts
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+
+    def stack(k, din, dout):
+        return jax.vmap(lambda kk: dense_init(kk, din, dout, cfg.param_dtype))(
+            jax.random.split(k, E)
+        )
+
+    p = {
+        "router": dense_init(ks[0], d, E, cfg.param_dtype),
+        "wi": stack(ks[1], d, ff),
+        "wo": stack(ks[3], ff, d),
+    }
+    if cfg.mlp_type == "swiglu":
+        p["wg"] = stack(ks[2], d, ff)
+    return p
+
+
+def _route_group(xt: jnp.ndarray, router: jnp.ndarray, cfg: ModelConfig,
+                 C: int) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-group routing. xt: (T, d) -> (slot (T*K,), gates (T*K,), keep, aux)."""
+    mc = cfg.moe
+    T = xt.shape[0]
+    E, K = mc.num_experts, mc.top_k
+    logits = (xt.astype(jnp.float32) @ router.astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)  # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    density = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32), axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_proxy) * E * mc.router_aux_weight
+
+    onehot = jax.nn.one_hot(expert_ids, E, dtype=jnp.int32).reshape(T * K, E)
+    pos = jnp.sum((jnp.cumsum(onehot, axis=0) - onehot) * onehot, axis=-1)  # (T*K,)
+    eid = expert_ids.reshape(T * K)
+    keep = pos < C
+    slot = jnp.where(keep, eid * C + pos, E * C)  # E*C = drop row
+    return slot, gate_vals.reshape(T * K), keep, aux
+
+
+def apply_moe(
+    p: dict[str, Any],
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    shard: ShardFn = no_shard,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out, aux_loss). B is the routing group dim."""
+    assert cfg.moe is not None
+    mc = cfg.moe
+    B, S, d = x.shape
+    E, K = mc.num_experts, mc.top_k
+    cd = cfg.compute_dtype
+    C = max(1, int(S * K * mc.capacity_factor / E))
+
+    slot, gates, keep, aux = jax.vmap(
+        lambda xt: _route_group(xt, p["router"], cfg, C)
+    )(x)  # slot/gates/keep: (B, S*K), aux: (B,)
+
+    # dispatch: per group scatter into (E*C+1, d)
+    xk = jnp.repeat(x, K, axis=1)  # (B, S*K, d) — row i*K+k is token i copy k
+
+    def scatter_group(slots, rows):
+        buf = jnp.zeros((E * C + 1, d), cd)
+        return buf.at[slots].add(rows.astype(cd))[: E * C]
+
+    buf = jax.vmap(scatter_group)(slot, xk).reshape(B, E, C, d)
+    buf = shard(buf, ("batch", "expert", None, "embed"))
+
+    # expert FFN, batched over groups; E sharded = expert parallelism
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["wg"].astype(cd)))
+        h = h * jnp.einsum("becd,edf->becf", buf, p["wi"].astype(cd))
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", buf, p["wi"].astype(cd)))
+    h = shard(h, ("batch", "expert", None, "mlp"))
+    out_e = jnp.einsum("becf,efd->becd", h, p["wo"].astype(cd))
+    out_e = shard(out_e, ("batch", "expert", None, "embed"))
+
+    # combine: gather each (token, k)'s slot output, weight by gate
+    flat = out_e.reshape(B, E * C, d)
+    flat = jnp.concatenate([flat, jnp.zeros((B, 1, d), cd)], axis=1)
+    gathered = jnp.take_along_axis(flat, slot[..., None], axis=1)  # (B, S*K, d)
+    w = (gates * keep).astype(cd)
+    out = jnp.sum((gathered * w[..., None]).reshape(B, S, K, d), axis=2)
+    return out, jnp.mean(aux)

@@ -1,0 +1,141 @@
+"""Selective SSM (Mamba-style) branch for the hybrid architecture (hymba).
+
+Train/prefill use a *chunked* scan: ``lax.scan`` over chunks of
+``cfg.ssm.chunk`` tokens with an in-chunk ``associative_scan`` — memory is
+bounded by the chunk, the sequential depth by seq/chunk.  Decode carries an
+``(h, conv_tail)`` recurrent state — O(1) per token, which is what makes
+the hybrid run the ``long_500k`` cell (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import ModelConfig, ShardFn, dense_init, no_shard
+
+
+def ssm_init(key: jax.Array, cfg: ModelConfig) -> dict[str, Any]:
+    sc = cfg.ssm
+    d = cfg.d_model
+    di = sc.expand * d
+    n = sc.state_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, cfg.param_dtype),
+        "conv": (jax.random.normal(ks[1], (sc.conv_width, di), jnp.float32) * 0.1
+                 ).astype(cfg.param_dtype),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+        ).astype(cfg.param_dtype),
+        "B_proj": dense_init(ks[2], di, n, cfg.param_dtype),
+        "C_proj": dense_init(ks[3], di, n, cfg.param_dtype),
+        "dt_proj": dense_init(ks[4], di, 1, cfg.param_dtype),
+        "D": jnp.ones((di,), cfg.param_dtype),
+        "out_proj": dense_init(ks[5], di, d, cfg.param_dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, tail: jnp.ndarray | None
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv. x: (B,S,di), w: (W,di), tail: (B,W-1,di)."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(W))
+    new_tail = xp[:, -(W - 1):] if W > 1 else tail
+    return out, new_tail
+
+
+def _ssm_chunk(h0: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """In-chunk scan of h_t = a_t h_{t-1} + b_t.
+    h0: (B,di,n); a,b: (B,L,di,n) -> (h_seq (B,L,di,n), h_last)."""
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, b_c = lax.associative_scan(combine, (a, b), axis=1)
+    h_seq = a_c * h0[:, None] + b_c
+    return h_seq, h_seq[:, -1]
+
+
+def apply_ssm(
+    p: dict[str, Any],
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    state: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+    shard: ShardFn = no_shard,
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray]]:
+    """x: (B,S,d). state = (h (B,di,n), conv_tail (B,W-1,di)) for decode.
+    Returns (out (B,S,d), new_state)."""
+    sc = cfg.ssm
+    cd = cfg.compute_dtype
+    B, S, d = x.shape
+    di = sc.expand * d
+    n = sc.state_dim
+
+    xz = x @ p["in_proj"].astype(cd)
+    xs, z = xz[..., :di], xz[..., di:]
+    tail = state[1] if state is not None else None
+    xs, new_tail = _causal_conv(xs, p["conv"].astype(cd), tail)
+    xs = jax.nn.silu(xs)
+    xs = shard(xs, ("batch", "seq", "mlp"))
+
+    dt = jax.nn.softplus(xs @ p["dt_proj"].astype(cd))          # (B,S,1)
+    Bm = xs @ p["B_proj"].astype(cd)                            # (B,S,n)
+    Cm = xs @ p["C_proj"].astype(cd)                            # (B,S,n)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # (di,n)
+
+    # discretize: a = exp(dt*A); b = dt * B ⊗ x
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(dtf[..., None] * A[None, None])                 # (B,S,di,n)
+    b = (dtf * xs.astype(jnp.float32))[..., None] * Bm.astype(jnp.float32)[:, :, None, :]
+
+    h0 = (
+        state[0].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((B, di, n), jnp.float32)
+    )
+
+    if S == 1:
+        h = a[:, 0] * h0 + b[:, 0]                              # (B,di,n)
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0].astype(jnp.float32))[:, None]
+        h_last = h
+    else:
+        # chunked scan
+        chunk = min(sc.chunk, S)
+        assert S % chunk == 0, (S, chunk)
+        nchunks = S // chunk
+        a_r = a.reshape(B, nchunks, chunk, di, n).swapaxes(0, 1)
+        b_r = b.reshape(B, nchunks, chunk, di, n).swapaxes(0, 1)
+
+        def step(h, ab):
+            ac, bc = ab
+            h_seq, h_new = _ssm_chunk(h, ac, bc)
+            return h_new, h_seq
+
+        h_last, h_all = lax.scan(step, h0, (a_r, b_r))
+        h_all = h_all.swapaxes(0, 1).reshape(B, S, di, n)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, Cm.astype(jnp.float32))
+
+    y = y.astype(cd) + xs * p["D"].astype(cd)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(cd)
+    return shard(out, ("batch", "seq", "embed")), (h_last.astype(cd), new_tail)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, layers: int
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    sc = cfg.ssm
+    di = sc.expand * cfg.d_model
+    return (
+        jnp.zeros((layers, batch, di, sc.state_dim), cfg.compute_dtype),
+        jnp.zeros((layers, batch, sc.conv_width - 1, di), cfg.compute_dtype),
+    )

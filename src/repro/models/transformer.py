@@ -1,0 +1,283 @@
+"""Decoder-only transformer LM covering the dense / moe / hybrid / vlm
+families.  One homogeneous layer is traced once under ``lax.scan`` over
+stacked parameters (bounds HLO size for the 80-layer configs); remat is
+applied to the scanned body per ``cfg.remat``.
+
+Modes:
+  * train:   full causal forward, no cache             -> logits
+  * prefill: causal forward, fills the KV/SSM cache    -> logits, cache
+  * decode:  single token against the cache            -> logits, cache
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import ModelConfig, ShardFn, dense_init, embed_init, no_shard
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    attention,
+    attn_init,
+    init_kv_cache,
+    mlp_init,
+    norm_init,
+)
+from repro.models.moe import apply_moe, moe_init
+from repro.models.ssm import apply_ssm, init_ssm_state, ssm_init
+
+
+# --------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------- #
+def layer_init(key: jax.Array, cfg: ModelConfig) -> dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {
+        "attn_norm": norm_init(ks[0], cfg.d_model, cfg),
+        "attn": attn_init(ks[1], cfg),
+        "mlp_norm": norm_init(ks[2], cfg.d_model, cfg),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_init(ks[3], cfg)
+    elif cfg.d_ff > 0:
+        p["mlp"] = mlp_init(ks[3], cfg)
+    if cfg.ssm is not None:  # hybrid: parallel SSM branch with fusion norms
+        p["ssm"] = ssm_init(ks[4], cfg)
+        p["attn_out_norm"] = norm_init(ks[5], cfg.d_model, cfg)
+        p["ssm_out_norm"] = norm_init(ks[6], cfg.d_model, cfg)
+    return p
+
+
+def lm_init(key: jax.Array, cfg: ModelConfig) -> dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    if cfg.scan_layers:
+        layers = jax.vmap(lambda k: layer_init(k, cfg))(
+            jax.random.split(ks[0], cfg.n_layers)
+        )
+    else:
+        layers = [
+            layer_init(k, cfg) for k in jax.random.split(ks[0], cfg.n_layers)
+        ]
+    p = {
+        "embed": embed_init(ks[1], cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "layers": layers,
+        "final_norm": norm_init(ks[2], cfg.d_model, cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[3], cfg.d_model, cfg.vocab, cfg.param_dtype)
+    return p
+
+
+def static_layer_windows(cfg: ModelConfig) -> list[int]:
+    """Python-int per-layer windows (0 = full) for the unrolled path —
+    enables the blocked attention impl (static slice sizes)."""
+    if cfg.attn_type != "sliding":
+        return [0] * cfg.n_layers
+    return [0 if i in cfg.global_attn_layers else cfg.window
+            for i in range(cfg.n_layers)]
+
+
+def layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """(n_layers,) traced per-layer window size: 0 = full attention.
+    Keeps hybrid stacks scan-homogeneous (DESIGN.md §4, hymba)."""
+    if cfg.attn_type != "sliding":
+        return jnp.zeros((cfg.n_layers,), jnp.int32)
+    w = jnp.full((cfg.n_layers,), cfg.window, jnp.int32)
+    for g in cfg.global_attn_layers:
+        w = w.at[g].set(0)
+    return w
+
+
+# --------------------------------------------------------------------- #
+# one decoder layer
+# --------------------------------------------------------------------- #
+def decoder_layer(
+    p: dict[str, Any],
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    layer_window: jnp.ndarray | None,
+    cache: dict[str, jnp.ndarray] | None,
+    cache_len: jnp.ndarray | None,
+    shard: ShardFn,
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray] | None, jnp.ndarray]:
+    """Returns (x, new_layer_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    normed = apply_norm(p["attn_norm"], x, cfg)
+    cache_kv = (cache["k"], cache["v"]) if cache is not None else None
+    cache_scales = None
+    if cache is not None and "k_scale" in cache:
+        cache_scales = (cache["k_scale"], cache["v_scale"])
+    attn_out, new_kv = attention(
+        p["attn"], normed, cfg, positions,
+        layer_window=layer_window, cache_kv=cache_kv,
+        cache_scales=cache_scales, cache_len=cache_len,
+        shard=shard,
+    )
+    new_cache: dict[str, jnp.ndarray] | None = None
+    if cfg.ssm is not None:
+        # hymba: parallel attention + SSM heads, normed-mean fusion
+        ssm_state = (
+            (cache["ssm_h"], cache["ssm_tail"]) if cache is not None else None
+        )
+        ssm_out, new_ssm = apply_ssm(p["ssm"], normed, cfg, ssm_state, shard)
+        mixed = 0.5 * (
+            apply_norm(p["attn_out_norm"], attn_out, cfg)
+            + apply_norm(p["ssm_out_norm"], ssm_out, cfg)
+        )
+        x = x + mixed
+        if cache is not None:
+            new_cache = {
+                "k": new_kv[0], "v": new_kv[1],
+                "ssm_h": new_ssm[0], "ssm_tail": new_ssm[1],
+            }
+            if len(new_kv) == 4:
+                new_cache["k_scale"], new_cache["v_scale"] = new_kv[2:]
+    else:
+        x = x + attn_out
+        if cache is not None:
+            new_cache = {"k": new_kv[0], "v": new_kv[1]}
+            if len(new_kv) == 4:
+                new_cache["k_scale"], new_cache["v_scale"] = new_kv[2:]
+
+    normed = apply_norm(p["mlp_norm"], x, cfg)
+    if cfg.moe is not None:
+        mlp_out, aux = apply_moe(p["moe"], normed, cfg, shard)
+    elif cfg.d_ff > 0:
+        mlp_out = apply_mlp(p["mlp"], normed, cfg, shard)
+    else:
+        mlp_out = jnp.zeros_like(x)
+    x = x + mlp_out
+    return shard(x, ("batch", "seq", "embed")), new_cache, aux
+
+
+# --------------------------------------------------------------------- #
+# full model apply
+# --------------------------------------------------------------------- #
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def lm_apply(
+    params: dict[str, Any],
+    tokens: jnp.ndarray | None,
+    cfg: ModelConfig,
+    *,
+    input_embeds: jnp.ndarray | None = None,
+    positions: jnp.ndarray | None = None,
+    cache: dict[str, jnp.ndarray] | None = None,
+    shard: ShardFn = no_shard,
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray] | None, jnp.ndarray]:
+    """Returns (logits, new_cache, aux_loss).
+
+    ``input_embeds`` (B,P,d) are prepended to the token embeddings (the
+    VLM/audio stub frontends); ``positions`` must then cover P+S entries.
+    """
+    cd = cfg.compute_dtype
+    x = None
+    if tokens is not None:
+        x = params["embed"][tokens].astype(cd)
+    if input_embeds is not None:
+        emb = input_embeds.astype(cd)
+        x = emb if x is None else jnp.concatenate([emb, x], axis=1)
+    B, S, _ = x.shape
+    x = shard(x, ("batch", "seq", "embed"))
+
+    cache_len = cache["len"] if cache is not None else None
+    if positions is None:
+        start = cache_len if cache is not None else 0
+        positions = jnp.arange(S)[None, :] + start
+        positions = jnp.broadcast_to(positions, (B, S))
+
+    windows = layer_windows(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def run_layer(x, layer_p, layer_cache, w):
+        return decoder_layer(
+            layer_p, x, cfg, positions, w, layer_cache, cache_len, shard
+        )
+
+    body = _remat(run_layer, cfg)
+
+    if cfg.scan_layers:
+        layer_caches = None
+        if cache is not None:
+            layer_caches = {k: v for k, v in cache.items() if k != "len"}
+
+        def scan_body(x, xs):
+            layer_p, layer_cache, w = xs
+            x, new_c, aux = body(x, layer_p, layer_cache, w)
+            return x, (new_c, aux)
+
+        xs = (params["layers"], layer_caches, windows)
+        x, (new_caches, auxs) = lax.scan(scan_body, x, xs)
+        aux_total = jnp.sum(auxs)
+        new_cache = None
+        if cache is not None:
+            new_cache = dict(new_caches)
+            new_cache["len"] = cache_len + S
+    else:
+        static_windows = static_layer_windows(cfg)
+        layers_p = params["layers"]
+        if isinstance(layers_p, dict):  # stacked (scan-init) params: unstack
+            layers_p = [
+                jax.tree.map(lambda v: v[i], layers_p)
+                for i in range(cfg.n_layers)
+            ]
+        new_layer_caches: list[Any] = []
+        for i, layer_p in enumerate(layers_p):
+            layer_cache = None
+            if cache is not None:
+                layer_cache = jax.tree.map(lambda v: v[i], {
+                    k: v for k, v in cache.items() if k != "len"
+                })
+            # close over the STATIC window (jax.checkpoint would trace a
+            # positional int into a tracer and kill the blocked-impl branch)
+            w_i = static_windows[i]
+            body_i = _remat(
+                lambda x, lp, lc, _w=w_i: run_layer(x, lp, lc, _w), cfg
+            )
+            x, new_c, aux = body_i(x, layer_p, layer_cache)
+            aux_total = aux_total + aux
+            new_layer_caches.append(new_c)
+        new_cache = None
+        if cache is not None:
+            stacked = jax.tree.map(
+                lambda *leaves: jnp.stack(leaves), *new_layer_caches
+            )
+            new_cache = dict(stacked)
+            new_cache["len"] = cache_len + S
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T.astype(cd)
+    else:
+        logits = x @ params["lm_head"].astype(cd)
+    return shard(logits, ("batch", "seq", "vocab")), new_cache, aux_total
+
+
+# --------------------------------------------------------------------- #
+# cache construction
+# --------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict[str, jnp.ndarray]:
+    # ring-buffer sizing is only safe when every layer is sliding-window
+    window = None
+    if cfg.windowed_cache and cfg.attn_type == "sliding" and not cfg.global_attn_layers:
+        window = cfg.window
+    kv = init_kv_cache(cfg, batch, max_len, cfg.n_layers, window=window)
+    cache: dict[str, jnp.ndarray] = dict(kv)  # k, v, len (+ int8 scales)
+    if cfg.ssm is not None:
+        h, tail = init_ssm_state(cfg, batch, cfg.n_layers)
+        cache["ssm_h"] = h
+        cache["ssm_tail"] = tail
+    return cache

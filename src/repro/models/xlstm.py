@@ -1,0 +1,284 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-
+parallel) and sLSTM (scalar memory, strictly recurrent), mixed at the
+paper's [7:1] ratio.
+
+The mLSTM chunkwise form is linear-attention-like: within a chunk of L
+tokens an (L, L) decay-weighted score matrix, across chunks a recurrent
+(C, n) carry — O(1) state per token at decode, which is why this arch runs
+the ``long_500k`` cell.  Gating follows the paper (exp input gate, sigmoid
+forget in log space) with input-gate preactivation clipping for stability
+(noted in DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import ModelConfig, ShardFn, dense_init, no_shard
+
+_CLIP = 8.0
+
+
+# --------------------------------------------------------------------- #
+# mLSTM
+# --------------------------------------------------------------------- #
+def mlstm_init(key: jax.Array, cfg: ModelConfig) -> dict[str, Any]:
+    d = cfg.d_model
+    di = int(cfg.xlstm.proj_factor * d)
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], d, di, cfg.param_dtype),
+        "wk": dense_init(ks[1], d, di, cfg.param_dtype),
+        "wv": dense_init(ks[2], d, di, cfg.param_dtype),
+        "wi": dense_init(ks[3], d, cfg.n_heads, cfg.param_dtype),
+        "wf": dense_init(ks[4], d, cfg.n_heads, cfg.param_dtype),
+        "wog": dense_init(ks[5], d, di, cfg.param_dtype),
+        "gn_scale": jnp.ones((di,), cfg.param_dtype),
+        "wo": dense_init(ks[6], di, d, cfg.param_dtype),
+    }
+
+
+def _head_groupnorm(x: jnp.ndarray, scale: jnp.ndarray, H: int) -> jnp.ndarray:
+    """Per-head RMS group norm over (B,S,H,dh)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(ms + 1e-6)
+    B, S, _, dh = x.shape
+    return (out.reshape(B, S, H * dh) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_mlstm(
+    p: dict[str, Any],
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    state: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray]]:
+    """x: (B,S,d); state = (C (B,H,dh,dh), n (B,H,dh)). Returns (out, state)."""
+    cd = cfg.compute_dtype
+    B, S, d = x.shape
+    H = cfg.n_heads
+    di = int(cfg.xlstm.proj_factor * d)
+    dh = di // H
+
+    q = (x @ p["wq"].astype(cd)).reshape(B, S, H, dh)
+    k = (x @ p["wk"].astype(cd)).reshape(B, S, H, dh) / jnp.sqrt(float(dh))
+    v = (x @ p["wv"].astype(cd)).reshape(B, S, H, dh)
+    logi = jnp.clip((x @ p["wi"].astype(cd)).astype(jnp.float32), -_CLIP, _CLIP)
+    logf = jax.nn.log_sigmoid((x @ p["wf"].astype(cd)).astype(jnp.float32))
+    og = jax.nn.sigmoid(x @ p["wog"].astype(cd))
+
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    C0 = (state[0] if state is not None else jnp.zeros((B, H, dh, dh))).astype(jnp.float32)
+    n0 = (state[1] if state is not None else jnp.zeros((B, H, dh))).astype(jnp.float32)
+
+    if S == 1:
+        f = jnp.exp(logf[:, 0])                                 # (B,H)
+        i = jnp.exp(logi[:, 0])
+        C1 = f[..., None, None] * C0 + i[..., None, None] * (
+            kf[:, 0, :, :, None] * vf[:, 0, :, None, :]
+        )
+        n1 = f[..., None] * n0 + i[..., None] * kf[:, 0]
+        num = jnp.einsum("bhkv,bhk->bhv", C1, qf[:, 0])
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n1, qf[:, 0])), 1.0)
+        h = (num / den[..., None])[:, None]                     # (B,1,H,dh)
+        C_last, n_last = C1, n1
+    else:
+        L = min(cfg.xlstm.chunk, S)
+        assert S % L == 0, (S, L)
+        nc = S // L
+
+        def chunk_step(carry, inp):
+            C_in, n_in = carry
+            qc, kc, vc, lic, lfc = inp  # (B,L,H,*) / (B,L,H)
+            F = jnp.cumsum(lfc, axis=1)                          # (B,L,H)
+            # intra-chunk decay matrix (B,H,L,L)
+            logD = (
+                F.transpose(0, 2, 1)[:, :, :, None]
+                - F.transpose(0, 2, 1)[:, :, None, :]
+                + lic.transpose(0, 2, 1)[:, :, None, :]
+            )
+            tri = jnp.tril(jnp.ones((L, L), bool))
+            Dm = jnp.where(tri[None, None], jnp.exp(logD), 0.0)
+            scores = jnp.einsum("bshd,bthd->bhst", qc, kc) * Dm
+            intra = jnp.einsum("bhst,bthd->bshd", scores, vc)
+            decay_in = jnp.exp(F)                                # (B,L,H)
+            inter = jnp.einsum("bshd,bhdv->bshv", qc, C_in) * decay_in[..., None]
+            num = intra + inter
+            # normalizer: n_t = exp(F_t)·n_in + Σ_{j<=t} D_tj k_j
+            n_t = decay_in[..., None] * n_in[:, None] + jnp.einsum(
+                "bhst,bthd->bshd", Dm, kc
+            )
+            den = jnp.maximum(
+                jnp.abs(jnp.einsum("bshd,bshd->bsh", n_t, qc)), 1.0
+            )
+            h = num / den[..., None]
+            # carry update
+            w_j = jnp.exp(F[:, -1:, :] - F + lic)                # (B,L,H)
+            C_out = jnp.exp(F[:, -1])[..., None, None] * C_in + jnp.einsum(
+                "blh,blhk,blhv->bhkv", w_j, kc, vc
+            )
+            n_out = jnp.exp(F[:, -1])[..., None] * n_in + jnp.einsum(
+                "blh,blhk->bhk", w_j, kc
+            )
+            return (C_out, n_out), h
+
+        qr = qf.reshape(B, nc, L, H, dh).swapaxes(0, 1)
+        kr = kf.reshape(B, nc, L, H, dh).swapaxes(0, 1)
+        vr = vf.reshape(B, nc, L, H, dh).swapaxes(0, 1)
+        lir = logi.reshape(B, nc, L, H).swapaxes(0, 1)
+        lfr = logf.reshape(B, nc, L, H).swapaxes(0, 1)
+        (C_last, n_last), h = lax.scan(chunk_step, (C0, n0), (qr, kr, vr, lir, lfr))
+        h = h.swapaxes(0, 1).reshape(B, S, H, dh)
+
+    out = _head_groupnorm(h.astype(cd), p["gn_scale"], H) * og
+    out = out @ p["wo"].astype(cd)
+    return out, (C_last.astype(cd), n_last.astype(cd))
+
+
+# --------------------------------------------------------------------- #
+# sLSTM
+# --------------------------------------------------------------------- #
+def slstm_init(key: jax.Array, cfg: ModelConfig) -> dict[str, Any]:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 10)
+    p: dict[str, Any] = {}
+    for i, g in enumerate(("i", "f", "z", "o")):
+        p[f"w{g}"] = dense_init(ks[i], d, d, cfg.param_dtype)
+        # block-diagonal (per-head) recurrent matrices
+        p[f"r{g}"] = (
+            jax.random.normal(ks[4 + i], (H, dh, dh), jnp.float32) / jnp.sqrt(dh)
+        ).astype(cfg.param_dtype)
+    ff = max(int(4 * d / 3), d)
+    p["up"] = dense_init(ks[8], d, 2 * ff, cfg.param_dtype)
+    p["down"] = dense_init(ks[9], ff, d, cfg.param_dtype)
+    p["gn_scale"] = jnp.ones((d,), cfg.param_dtype)
+    return p
+
+
+def _slstm_cell(p, cfg, x_t, h, c, n, m):
+    """One sLSTM step. All f32. x_t/h/c/n/m: (B,d)."""
+    H = cfg.n_heads
+    B, d = x_t.shape
+    dh = d // H
+
+    def rec(name, hh):
+        return jnp.einsum(
+            "bhi,hij->bhj", hh.reshape(B, H, dh), p[name].astype(jnp.float32)
+        ).reshape(B, d)
+
+    it = x_t @ p["wi"].astype(jnp.float32) + rec("ri", h)
+    ft = x_t @ p["wf"].astype(jnp.float32) + rec("rf", h)
+    zt = x_t @ p["wz"].astype(jnp.float32) + rec("rz", h)
+    ot = x_t @ p["wo"].astype(jnp.float32) + rec("ro", h)
+
+    it = jnp.clip(it, -_CLIP, _CLIP)
+    m_new = jnp.maximum(ft + m, it)
+    i_g = jnp.exp(it - m_new)
+    f_g = jnp.exp(ft + m - m_new)
+    c_new = f_g * c + i_g * jnp.tanh(zt)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, c_new, n_new, m_new
+
+
+def apply_slstm(
+    p: dict[str, Any],
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    state: tuple[jnp.ndarray, ...] | None = None,
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, ...]]:
+    """x: (B,S,d); state = (h,c,n,m) each (B,d) f32. Recurrent scan."""
+    cd = cfg.compute_dtype
+    B, S, d = x.shape
+    if state is None:
+        z = jnp.zeros((B, d), jnp.float32)
+        state = (z, z, z, z)
+    xf = x.astype(jnp.float32)
+
+    def step(carry, x_t):
+        h, c, n, m = carry
+        h, c, n, m = _slstm_cell(p, cfg, x_t, h, c, n, m)
+        return (h, c, n, m), h
+
+    state, hs = lax.scan(step, state, xf.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1)  # (B,S,d)
+    # group norm + gated FFN (xLSTM post-up-projection)
+    ms = jnp.mean(hs * hs, axis=-1, keepdims=True)
+    hs = (hs * lax.rsqrt(ms + 1e-6) * p["gn_scale"].astype(jnp.float32)).astype(cd)
+    ff = p["up"].shape[1] // 2
+    u = hs @ p["up"].astype(cd)
+    hs = jax.nn.gelu(u[..., :ff]) * u[..., ff:]
+    out = hs @ p["down"].astype(cd)
+    return out, state
+
+
+# --------------------------------------------------------------------- #
+# full xLSTM language model
+# --------------------------------------------------------------------- #
+def xlstm_block_kinds(cfg: ModelConfig) -> list[str]:
+    xc = cfg.xlstm
+    return [
+        "slstm" if (i % xc.slstm_every == xc.slstm_offset) else "mlstm"
+        for i in range(cfg.n_layers)
+    ]
+
+
+def xlstm_lm_init(key: jax.Array, cfg: ModelConfig) -> dict[str, Any]:
+    from repro.models.common import embed_init
+    from repro.models.layers import norm_init
+
+    kinds = xlstm_block_kinds(cfg)
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    layers = []
+    for i, kind in enumerate(kinds):
+        kk = jax.random.split(ks[i], 2)
+        if kind == "mlstm":
+            blk = {"norm": norm_init(kk[0], cfg.d_model, cfg), "mlstm": mlstm_init(kk[1], cfg)}
+        else:
+            blk = {"norm": norm_init(kk[0], cfg.d_model, cfg), "slstm": slstm_init(kk[1], cfg)}
+        layers.append(blk)
+    return {
+        "embed": embed_init(ks[-3], cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "layers": layers,
+        "final_norm": norm_init(ks[-2], cfg.d_model, cfg),
+    }
+
+
+def xlstm_lm_apply(
+    params: dict[str, Any],
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    state: list[Any] | None = None,
+    shard: ShardFn = no_shard,
+) -> tuple[jnp.ndarray, list[Any]]:
+    """tokens (B,S) -> (logits (B,S,V), new_states). ``state`` is a list of
+    per-layer recurrent states (None on first call / training)."""
+    from repro.models.layers import apply_norm
+
+    cd = cfg.compute_dtype
+    kinds = xlstm_block_kinds(cfg)
+    x = params["embed"][tokens].astype(cd)
+    x = shard(x, ("batch", "seq", "embed"))
+    new_states: list[Any] = []
+    for i, (kind, blk) in enumerate(zip(kinds, params["layers"])):
+        st = state[i] if state is not None else None
+        normed = apply_norm(blk["norm"], x, cfg)
+        if kind == "mlstm":
+            out, st_new = apply_mlstm(blk["mlstm"], normed, cfg, st)
+        else:
+            out, st_new = apply_slstm(blk["slstm"], normed, cfg, st)
+        x = x + out
+        x = shard(x, ("batch", "seq", "embed"))
+        new_states.append(st_new)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = x @ params["embed"].T.astype(cd)  # tied embeddings
+    return shard(logits, ("batch", "seq", "vocab")), new_states

@@ -1,0 +1,100 @@
+"""AdamW with global-norm clipping — hand-rolled (no optax dependency),
+pytree-native so optimizer state shards exactly like parameters (ZeRO).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import pytree_dataclass
+
+
+@pytree_dataclass
+class AdamWState:
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray | float], tuple[Any, Any]]
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> tuple[Any, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: x * scale, tree), norm
+
+
+def adamw(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float | None = 1.0,
+) -> Optimizer:
+    def init(params: Any) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def update(grads: Any, state: AdamWState, params: Any, lr) -> tuple[Any, AdamWState]:
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        count = state.count + 1
+        cf = count.astype(jnp.float32)
+        b1c = 1.0 - b1**cf
+        b2c = 1.0 - b2**cf
+
+        def upd(g, m, n, p):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * gf
+            n2 = b2 * n + (1 - b2) * gf * gf
+            mhat = m2 / b1c
+            nhat = n2 / b2c
+            step = mhat / (jnp.sqrt(nhat) + eps) + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+            return new_p, m2, n2
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.mu)
+        flat_n = jax.tree.leaves(state.nu)
+        out = [upd(g, m, n, p) for g, m, n, p in zip(flat_g, flat_m, flat_n, flat_p)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+        return new_params, AdamWState(mu=new_mu, nu=new_nu, count=count)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr_scale: float = 1.0, clip_norm: float | None = None) -> Optimizer:
+    """Plain SGD (cheap optimizer-state option for memory-tight configs)."""
+
+    def init(params: Any) -> Any:
+        return jnp.zeros((), jnp.int32)
+
+    def update(grads, state, params, lr):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * lr_scale * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads,
+        )
+        return new_params, state + 1
+
+    return Optimizer(init=init, update=update)

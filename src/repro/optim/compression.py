@@ -1,0 +1,71 @@
+"""Gradient compression with error feedback (cross-pod traffic reduction).
+
+int8 block-quantized all-reduce emulation: gradients are quantized to int8
+with per-block scales *before* the (slow, cross-pod) reduction axis and
+dequantized after; the quantization residual is carried in an error-feedback
+buffer so the compression is unbiased over time (1-bit-Adam-style analysis).
+
+Under pjit, the actual collective is inserted by XLA from shardings; the
+compression transform here reduces the *bytes* of the tensor crossing the
+pod axis — the dry-run's collective-bytes parser shows the reduction.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _quant_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant_int8(q: jnp.ndarray, scale: jnp.ndarray, shape, size) -> jnp.ndarray:
+    out = (q.astype(jnp.float32) * scale).reshape(-1)[:size]
+    return out.reshape(shape)
+
+
+def compress_tree(grads: Any, error: Any | None) -> tuple[Any, Any]:
+    """Quantize every leaf (with error feedback). Returns (quantized
+    pytree of (q, scale, shape), new_error)."""
+
+    def one(g, e):
+        gf = g.astype(jnp.float32)
+        if e is not None:
+            gf = gf + e
+        q, s = _quant_int8(gf)
+        deq = _dequant_int8(q, s, gf.shape, gf.size)
+        return (q, s), gf - deq
+
+    leaves, treedef = jax.tree.flatten(grads)
+    err_leaves = jax.tree.leaves(error) if error is not None else [None] * len(leaves)
+    out = [one(g, e) for g, e in zip(leaves, err_leaves)]
+    qtree = jax.tree.unflatten(treedef, [o[0] for o in out])
+    etree = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return qtree, etree
+
+
+def decompress_tree(qtree: Any, like: Any) -> Any:
+    def one(qs, g):
+        q, s = qs
+        return _dequant_int8(q, s, g.shape, g.size).astype(jnp.float32)
+
+    leaves_q = jax.tree.leaves(qtree, is_leaf=lambda x: isinstance(x, tuple))
+    leaves_g, treedef = jax.tree.flatten(like)
+    return jax.tree.unflatten(
+        treedef, [one(q, g) for q, g in zip(leaves_q, leaves_g)]
+    )
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,34 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_cosine(
+    peak_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1
+):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr
+
+
+def constant(peak_lr: float):
+    return lambda step: jnp.full((), peak_lr, jnp.float32)
+
+
+def linear_decay(peak_lr: float, total_steps: int):
+    """The paper's PPO schedule: 'Linearly Decreased to 0' (Table 3)."""
+
+    def lr(step):
+        frac = 1.0 - jnp.clip(jnp.asarray(step, jnp.float32) / total_steps, 0.0, 1.0)
+        return peak_lr * frac
+
+    return lr

@@ -1,0 +1,5 @@
+from repro.rl.gae import gae
+from repro.rl.nets import ActorCritic
+from repro.rl.ppo import PPOConfig, train_device, train_host
+
+__all__ = ["ActorCritic", "PPOConfig", "gae", "train_device", "train_host"]

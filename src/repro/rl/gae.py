@@ -1,0 +1,34 @@
+"""Generalized Advantage Estimation (Schulman et al.) — reverse scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def gae(
+    rewards: jnp.ndarray,      # (T, N)
+    values: jnp.ndarray,       # (T, N)
+    dones: jnp.ndarray,        # (T, N)  done AFTER this transition
+    last_values: jnp.ndarray,  # (N,)
+    gamma: float = 0.99,
+    lam: float = 0.95,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (advantages (T,N), returns (T,N))."""
+    not_done = 1.0 - dones.astype(jnp.float32)
+
+    def step(carry, xs):
+        adv_next, v_next = carry
+        r, v, nd = xs
+        delta = r + gamma * v_next * nd - v
+        adv = delta + gamma * lam * nd * adv_next
+        return (adv, v), adv
+
+    (_, _), advs = lax.scan(
+        step,
+        (jnp.zeros_like(last_values), last_values),
+        (rewards, values, not_done),
+        reverse=True,
+    )
+    return advs, advs + values

@@ -1,0 +1,289 @@
+"""PPO (Schulman et al. 2017) over any EnvPool engine — the paper's §4.2
+end-to-end integration.  Two drivers:
+
+  * ``train_device``: fully on-device — collect via the jitted pool
+    (``lax.scan``, paper App. E) and update via jitted PPO epochs; the
+    only host sync per iteration is metrics.
+  * ``train_host``: numpy loop over a host engine (thread / subprocess /
+    for-loop) with the SAME jitted update — this is the configuration the
+    paper's Figure 4 profiles (env-step vs inference vs train vs other
+    timing), reproduced in benchmarks/bench_ppo_profile.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.device_pool import DeviceEnvPool
+from repro.rl.gae import gae
+from repro.rl.nets import ActorCritic
+from repro.optim import adamw, linear_decay
+from repro.utils.pytree import pytree_dataclass
+
+
+@dataclasses.dataclass
+class PPOConfig:
+    total_steps: int = 100_000
+    num_steps: int = 128          # rollout length per env (N_steps)
+    lr: float = 2.5e-4
+    gamma: float = 0.99
+    lam: float = 0.95
+    clip: float = 0.2
+    vf_coef: float = 0.5
+    ent_coef: float = 0.01
+    epochs: int = 4
+    minibatches: int = 4
+    max_grad_norm: float = 0.5
+    anneal_lr: bool = True
+    vf_clip: bool = True
+
+
+@pytree_dataclass
+class PPOState:
+    params: Any
+    opt: Any
+    step: jnp.ndarray
+
+
+def make_ppo_update(net: ActorCritic, cfg: PPOConfig, total_updates: int):
+    opt = adamw(b1=0.9, b2=0.999, eps=1e-5, weight_decay=0.0,
+                clip_norm=cfg.max_grad_norm)
+    lr_fn = (linear_decay(cfg.lr, total_updates) if cfg.anneal_lr
+             else (lambda s: cfg.lr))
+
+    def loss_fn(params, batch):
+        logp, ent, v = net.logp_entropy(params, batch["obs"], batch["actions"])
+        ratio = jnp.exp(logp - batch["logp"])
+        adv = batch["adv"]
+        adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+        pg1 = -adv * ratio
+        pg2 = -adv * jnp.clip(ratio, 1 - cfg.clip, 1 + cfg.clip)
+        pg_loss = jnp.mean(jnp.maximum(pg1, pg2))
+        if cfg.vf_clip:
+            v_clip = batch["values"] + jnp.clip(
+                v - batch["values"], -cfg.clip, cfg.clip
+            )
+            vf_loss = 0.5 * jnp.mean(
+                jnp.maximum((v - batch["ret"]) ** 2, (v_clip - batch["ret"]) ** 2)
+            )
+        else:
+            vf_loss = 0.5 * jnp.mean((v - batch["ret"]) ** 2)
+        ent_loss = -jnp.mean(ent)
+        loss = pg_loss + cfg.vf_coef * vf_loss + cfg.ent_coef * ent_loss
+        return loss, {"pg": pg_loss, "vf": vf_loss, "ent": -ent_loss,
+                      "ratio": jnp.mean(ratio)}
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def update(state: PPOState, rollout: dict[str, jnp.ndarray], key: jax.Array):
+        """rollout leaves: (T, M, ...) — flattened to (T*M, ...)."""
+        flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in rollout.items()}
+        B = flat["obs"].shape[0]
+        mb = B // cfg.minibatches
+
+        def epoch(carry, ek):
+            state = carry
+            perm = jax.random.permutation(ek, B)
+
+            def mb_step(state, i):
+                idx = jax.lax.dynamic_slice_in_dim(perm, i * mb, mb)
+                batch = {k: v[idx] for k, v in flat.items()}
+                (loss, metrics), grads = grad_fn(state.params, batch)
+                lr = lr_fn(state.step)
+                params, opt_state = opt.update(grads, state.opt, state.params, lr)
+                return PPOState(params, opt_state, state.step + 1), (loss, metrics)
+
+            state, (losses, metrics) = jax.lax.scan(
+                mb_step, state, jnp.arange(cfg.minibatches)
+            )
+            return state, (losses, metrics)
+
+        keys = jax.random.split(key, cfg.epochs)
+        state, (losses, metrics) = jax.lax.scan(epoch, state, keys)
+        out = {k: jnp.mean(v) for k, v in metrics.items()}
+        out["loss"] = jnp.mean(losses)
+        return state, out
+
+    return opt, update
+
+
+# --------------------------------------------------------------------- #
+# fully on-device driver
+# --------------------------------------------------------------------- #
+def train_device(
+    pool: DeviceEnvPool,
+    cfg: PPOConfig,
+    seed: int = 0,
+    log_fn: Callable[[dict], None] | None = None,
+    hidden: tuple[int, ...] = (256, 128, 64),
+):
+    net = ActorCritic(pool.spec, hidden=hidden)
+    key = jax.random.PRNGKey(seed)
+    key, k_init, k_pool = jax.random.split(key, 3)
+    params = net.init(k_init)
+
+    M = pool.batch_size
+    steps_per_iter = cfg.num_steps * M
+    total_updates = max(
+        1, cfg.total_steps // steps_per_iter
+    ) * cfg.epochs * cfg.minibatches
+    opt, update = make_ppo_update(net, cfg, total_updates)
+    state = PPOState(params=params, opt=opt.init(params), step=jnp.int32(0))
+
+    def collect(state, ps, ts, key):
+        def one_step(carry, k):
+            ps, ts = carry
+            a, logp, v, _ = net.sample(state.params, ts.obs, k)
+            ps, new_ts = pool.step(ps, a, ts.env_id)
+            data = {
+                "obs": ts.obs, "actions": a, "logp": logp, "values": v,
+                "rewards": new_ts.reward, "dones": new_ts.done,
+                "ep_ret": new_ts.episode_return,
+            }
+            return (ps, new_ts), data
+
+        keys = jax.random.split(key, cfg.num_steps)
+        (ps, ts), traj = jax.lax.scan(one_step, (ps, ts), keys)
+        _, last_v = net.forward(state.params, ts.obs)
+        adv, ret = gae(traj["rewards"], traj["values"], traj["dones"],
+                       last_v, cfg.gamma, cfg.lam)
+        rollout = {
+            "obs": traj["obs"], "actions": traj["actions"],
+            "logp": traj["logp"], "values": traj["values"],
+            "adv": adv, "ret": ret,
+        }
+        ep_returns = traj["ep_ret"]
+        dones = traj["dones"]
+        return ps, ts, rollout, ep_returns, dones
+
+    collect = jax.jit(collect, donate_argnums=(1,))
+    update = jax.jit(update, donate_argnums=(0,))
+
+    ps, ts = pool.reset(k_pool)
+    n_iters = max(1, cfg.total_steps // steps_per_iter)
+    history = []
+    t0 = time.time()
+    for it in range(n_iters):
+        key, kc, ku = jax.random.split(key, 3)
+        ps, ts, rollout, ep_returns, dones = collect(state, ps, ts, kc)
+        state, metrics = update(state, rollout, ku)
+        done_mask = np.asarray(dones, bool)
+        rets = np.asarray(ep_returns)[done_mask]
+        rec = {
+            "iter": it,
+            "env_steps": (it + 1) * steps_per_iter,
+            "time_s": time.time() - t0,
+            "episodes": int(done_mask.sum()),
+            "mean_return": float(rets.mean()) if rets.size else float("nan"),
+            **{k: float(v) for k, v in metrics.items()},
+        }
+        history.append(rec)
+        if log_fn:
+            log_fn(rec)
+    return state, net, history
+
+
+# --------------------------------------------------------------------- #
+# host-engine driver (the paper's Fig. 4 profile path)
+# --------------------------------------------------------------------- #
+def train_host(
+    env_pool,                     # ThreadEnvPool / ForLoopEnv / SubprocessEnv
+    spec,
+    cfg: PPOConfig,
+    seed: int = 0,
+    log_fn: Callable[[dict], None] | None = None,
+    hidden: tuple[int, ...] = (256, 128, 64),
+):
+    """Returns (state, net, history, profile) where profile has the paper's
+    four timing buckets: env_step / inference / train / other."""
+    net = ActorCritic(spec, hidden=hidden)
+    key = jax.random.PRNGKey(seed)
+    key, k_init = jax.random.split(key)
+    params = net.init(k_init)
+
+    M = getattr(env_pool, "batch_size", env_pool.num_envs)
+    steps_per_iter = cfg.num_steps * M
+    total_updates = max(1, cfg.total_steps // steps_per_iter) \
+        * cfg.epochs * cfg.minibatches
+    opt, update = make_ppo_update(net, cfg, total_updates)
+    state = PPOState(params=params, opt=opt.init(params), step=jnp.int32(0))
+
+    sample = jax.jit(net.sample)
+    forward = jax.jit(net.forward)
+    update = jax.jit(update, donate_argnums=(0,))
+    gae_fn = jax.jit(
+        lambda r, v, d, lv: gae(r, v, d, lv, cfg.gamma, cfg.lam)
+    )
+
+    if hasattr(env_pool, "async_reset"):
+        env_pool.async_reset()
+        out = env_pool.recv()
+    else:
+        out = env_pool.reset()
+
+    prof = {"env_step": 0.0, "inference": 0.0, "train": 0.0, "other": 0.0}
+    history = []
+    n_iters = max(1, cfg.total_steps // steps_per_iter)
+    t_start = time.time()
+    for it in range(n_iters):
+        traj: dict[str, list] = {k: [] for k in
+                                 ("obs", "actions", "logp", "values",
+                                  "rewards", "dones", "ep_ret")}
+        for t in range(cfg.num_steps):
+            t0 = time.time()
+            key, ks = jax.random.split(key)
+            obs = jnp.asarray(out["obs"])
+            a, logp, v, _ = sample(state.params, obs, ks)
+            a_np = np.asarray(a)
+            t1 = time.time()
+            prof["inference"] += t1 - t0
+            new_out = env_pool.step(a_np, out["env_id"])
+            t2 = time.time()
+            prof["env_step"] += t2 - t1
+            traj["obs"].append(obs)
+            traj["actions"].append(a)
+            traj["logp"].append(logp)
+            traj["values"].append(v)
+            traj["rewards"].append(np.asarray(new_out["reward"]))
+            traj["dones"].append(np.asarray(new_out["done"]))
+            traj["ep_ret"].append(np.asarray(new_out["episode_return"]))
+            out = new_out
+            prof["other"] += time.time() - t2
+
+        t0 = time.time()
+        rewards = jnp.asarray(np.stack(traj["rewards"]))
+        dones = jnp.asarray(np.stack(traj["dones"]))
+        values = jnp.stack(traj["values"])
+        _, last_v = forward(state.params, jnp.asarray(out["obs"]))
+        adv, ret = gae_fn(rewards, values, dones, last_v)
+        rollout = {
+            "obs": jnp.stack(traj["obs"]),
+            "actions": jnp.stack(traj["actions"]),
+            "logp": jnp.stack(traj["logp"]),
+            "values": values,
+            "adv": adv, "ret": ret,
+        }
+        prof["other"] += time.time() - t0
+        t0 = time.time()
+        key, ku = jax.random.split(key)
+        state, metrics = update(state, rollout, ku)
+        jax.block_until_ready(metrics["loss"])
+        prof["train"] += time.time() - t0
+
+        done_arr = np.stack(traj["dones"])
+        rets = np.stack(traj["ep_ret"])[done_arr]
+        history.append({
+            "iter": it, "env_steps": (it + 1) * steps_per_iter,
+            "time_s": time.time() - t_start,
+            "mean_return": float(rets.mean()) if rets.size else float("nan"),
+            **{k: float(v) for k, v in metrics.items()},
+        })
+        if log_fn:
+            log_fn(history[-1])
+    return state, net, history, prof

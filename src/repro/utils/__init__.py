@@ -1,0 +1,23 @@
+from repro.utils.pytree import (
+    pytree_dataclass,
+    static_field,
+    tree_bytes,
+    tree_count_params,
+    tree_gather,
+    tree_scatter,
+    tree_slice,
+    tree_stack,
+    tree_where,
+)
+
+__all__ = [
+    "pytree_dataclass",
+    "static_field",
+    "tree_bytes",
+    "tree_count_params",
+    "tree_gather",
+    "tree_scatter",
+    "tree_slice",
+    "tree_stack",
+    "tree_where",
+]

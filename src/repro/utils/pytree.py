@@ -1,0 +1,94 @@
+"""Small pytree helpers shared across the framework.
+
+``pytree_dataclass`` registers a frozen dataclass as a JAX pytree with
+support for static (non-traced) fields via ``static_field()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, TypeVar
+
+import jax
+
+_T = TypeVar("_T")
+
+
+def static_field(**kwargs: Any) -> Any:
+    """A dataclass field treated as pytree metadata (not traced)."""
+    metadata = dict(kwargs.pop("metadata", {}) or {})
+    metadata["pytree_static"] = True
+    return dataclasses.field(metadata=metadata, **kwargs)
+
+
+def pytree_dataclass(cls: type[_T]) -> type[_T]:
+    """Decorator: frozen dataclass registered as a JAX pytree node."""
+    cls = dataclasses.dataclass(frozen=True)(cls)
+    data_fields = []
+    meta_fields = []
+    for f in dataclasses.fields(cls):
+        if f.metadata.get("pytree_static", False):
+            meta_fields.append(f.name)
+        else:
+            data_fields.append(f.name)
+    jax.tree_util.register_dataclass(
+        cls, data_fields=data_fields, meta_fields=meta_fields
+    )
+
+    def _replace(self: _T, **changes: Any) -> _T:
+        return dataclasses.replace(self, **changes)
+
+    cls.replace = _replace  # type: ignore[attr-defined]
+    return cls
+
+
+def tree_stack(trees: list[Any]) -> Any:
+    """Stack a list of identical pytrees along a new leading axis."""
+    import jax.numpy as jnp
+
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def tree_slice(tree: Any, idx: Any) -> Any:
+    """Index every leaf of a pytree along the leading axis."""
+    return jax.tree.map(lambda x: x[idx], tree)
+
+
+def tree_gather(tree: Any, indices: Any) -> Any:
+    """Gather rows ``indices`` from the leading axis of every leaf."""
+    import jax.numpy as jnp
+
+    return jax.tree.map(lambda x: jnp.take(x, indices, axis=0), tree)
+
+
+def tree_scatter(tree: Any, indices: Any, updates: Any) -> Any:
+    """Scatter ``updates`` rows into the leading axis of every leaf."""
+    return jax.tree.map(lambda x, u: x.at[indices].set(u), tree, updates)
+
+
+def tree_where(cond: Any, a: Any, b: Any) -> Any:
+    """Per-leaf ``where`` with a leading-axis boolean mask."""
+    import jax.numpy as jnp
+
+    def _sel(x, y):
+        c = cond.reshape(cond.shape + (1,) * (x.ndim - cond.ndim))
+        return jnp.where(c, x, y)
+
+    return jax.tree.map(_sel, a, b)
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of all array leaves."""
+    import numpy as np
+
+    return sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize
+        for x in jax.tree.leaves(tree)
+        if hasattr(x, "shape")
+    )
+
+
+def tree_count_params(tree: Any) -> int:
+    import numpy as np
+
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree) if hasattr(x, "shape"))

@@ -1,0 +1,13 @@
+import os
+import sys
+
+# tests must see ONE device (harness contract: the 512-device override is
+# dryrun.py-only)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

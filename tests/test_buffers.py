@@ -1,0 +1,91 @@
+"""Unit + property tests for the host buffer queues (paper App. D)."""
+
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.buffers import ActionBufferQueue, StateBufferQueue
+
+
+def test_action_queue_fifo():
+    q = ActionBufferQueue(num_envs=4)
+    q.put_batch([(0, "a"), (1, "b"), (2, "c")])
+    assert q.get() == (0, "a")
+    assert q.get() == (1, "b")
+    q.put_batch([(3, "d")])
+    assert q.get() == (2, "c")
+    assert q.get() == (3, "d")
+
+
+def test_action_queue_timeout():
+    q = ActionBufferQueue(num_envs=2)
+    with pytest.raises(TimeoutError):
+        q.get(timeout=0.05)
+
+
+def test_action_queue_threaded():
+    q = ActionBufferQueue(num_envs=16)
+    got = []
+    lock = threading.Lock()
+
+    def consumer():
+        for _ in range(8):
+            item = q.get(timeout=5)
+            with lock:
+                got.append(item)
+
+    threads = [threading.Thread(target=consumer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    q.put_batch([(i, i * 10) for i in range(32)])
+    for t in threads:
+        t.join()
+    assert sorted(got) == [(i, i * 10) for i in range(32)]
+
+
+@given(
+    batch=st.integers(1, 8),
+    num_envs=st.integers(1, 32),
+)
+@settings(max_examples=25, deadline=None)
+def test_state_queue_blocks(batch, num_envs):
+    num_envs = max(num_envs, batch)
+    fields = {"obs": ((3,), np.float32), "env_id": ((), np.int32)}
+    q = StateBufferQueue(fields, batch, num_envs)
+    # write 2 full blocks worth of slots in order
+    for round_ in range(2):
+        for j in range(batch):
+            blk, slot = q.acquire_slot()
+            blk.write(slot, {"obs": np.full(3, j), "env_id": j})
+        out = q.take(timeout=2)
+        assert out["obs"].shape == (batch, 3)
+        assert sorted(out["env_id"].tolist()) == list(range(batch))
+
+
+def test_state_queue_ownership_transfer():
+    fields = {"x": ((), np.float32)}
+    q = StateBufferQueue(fields, 2, 4)
+    blk, slot = q.acquire_slot()
+    blk.write(slot, {"x": 1.0})
+    blk2, slot2 = q.acquire_slot()
+    blk2.write(slot2, {"x": 2.0})
+    out1 = q.take()
+    # subsequent writes must not alias the handed-out block
+    blk3, slot3 = q.acquire_slot()
+    blk3.write(slot3, {"x": 99.0})
+    assert out1["x"].tolist() == [1.0, 2.0]
+
+
+def test_state_queue_out_of_order_completion():
+    fields = {"x": ((), np.int32)}
+    q = StateBufferQueue(fields, 3, 6)
+    slots = [q.acquire_slot() for _ in range(3)]
+    # write in reverse order; block must only be ready after all writes
+    ready_before = slots[0][0].ready.is_set()
+    for (blk, slot), v in zip(reversed(slots), (30, 20, 10)):
+        blk.write(slot, {"x": v})
+    assert not ready_before
+    out = q.take(timeout=1)
+    assert sorted(out["x"].tolist()) == [10, 20, 30]

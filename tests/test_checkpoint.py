@@ -1,0 +1,74 @@
+"""Checkpoint store: atomic save/restore, async, GC, elastic reshard."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointStore
+
+
+def tree():
+    return {
+        "params": {"w": jnp.arange(12.0).reshape(3, 4),
+                   "layers": [jnp.ones(3), jnp.zeros(2)]},
+        "step": jnp.int32(7),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    t = tree()
+    store.save(7, t, {"note": "x"})
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), t)
+    out = store.restore(7, like)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert store.meta(7)["note"] == "x"
+
+
+def test_async_save_then_restore(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    t = tree()
+    store.save_async(3, t)
+    store.wait()
+    assert store.latest_step() == 3
+    out = store.restore(3, jax.tree.map(jnp.zeros_like, t))
+    np.testing.assert_array_equal(out["params"]["w"], t["params"]["w"])
+
+
+def test_gc_keeps_latest(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=2)
+    t = tree()
+    for s in (1, 2, 3, 4):
+        store.save(s, t)
+    assert store.steps() == [3, 4]
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """tmp dirs must never be listed as valid steps."""
+    store = CheckpointStore(str(tmp_path))
+    os.makedirs(os.path.join(str(tmp_path), "step_9.tmp"))
+    assert store.steps() == []
+
+
+def test_elastic_restore_to_mesh(tmp_path):
+    """A checkpoint saved unsharded restores onto a mesh with shardings."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    store = CheckpointStore(str(tmp_path))
+    t = {"w": jnp.arange(16.0).reshape(4, 4)}
+    store.save(1, t)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    sh = {"w": NamedSharding(mesh, P(None, None))}
+    out = store.restore(1, t, sh)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(t["w"]))
+    assert out["w"].sharding == sh["w"]
+
+
+def test_preemption_flag(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    assert not store.preempted.is_set()
+    store.preempted.set()
+    assert store.preempted.is_set()

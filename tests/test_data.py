@@ -1,0 +1,48 @@
+"""Data pipeline: determinism (restart-safety), sharding, markov floor."""
+
+import numpy as np
+
+from repro.data import BatchSpec, BinTokenSource, SyntheticSource, write_bin_tokens
+
+
+def test_synthetic_deterministic_by_step():
+    src = SyntheticSource(vocab=128, seed=0)
+    spec = BatchSpec(4, 16, 128)
+    a = src.batch(spec, step=7)
+    b = src.batch(spec, step=7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = src.batch(spec, step=8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_synthetic_markov_structure():
+    src = SyntheticSource(vocab=64, branching=4, seed=0)
+    spec = BatchSpec(8, 32, 64)
+    b = src.batch(spec, 0)
+    # every (t, t+1) transition must be a legal chain edge
+    toks = np.concatenate([b["tokens"], b["labels"][:, -1:]], axis=1)
+    for row in toks:
+        for t in range(len(row) - 1):
+            assert row[t + 1] in src.next_tokens[row[t]]
+
+
+def test_labels_are_shifted_tokens():
+    src = SyntheticSource(vocab=32, seed=0)
+    spec = BatchSpec(2, 8, 32)
+    b = src.batch(spec, 3)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_bin_source_roundtrip(tmp_path):
+    path = str(tmp_path / "toks.bin")
+    tokens = np.arange(10_000) % 1000
+    write_bin_tokens(path, tokens)
+    src = BinTokenSource(path)
+    spec = BatchSpec(2, 16, 1000)
+    a = src.batch(spec, 0)
+    b = src.batch(spec, 0)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # host sharding: different hosts get different data
+    src2 = BinTokenSource(path, host=1, num_hosts=2)
+    c = src2.batch(spec, 0)
+    assert not np.array_equal(a["tokens"], c["tokens"])

@@ -1,0 +1,85 @@
+"""RL substrate: GAE vs numpy oracle (hypothesis), PPO smoke."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.rl.gae import gae
+
+
+def gae_numpy(rewards, values, dones, last_values, gamma, lam):
+    T, N = rewards.shape
+    adv = np.zeros((T, N))
+    next_adv = np.zeros(N)
+    next_val = last_values
+    for t in reversed(range(T)):
+        nd = 1.0 - dones[t]
+        delta = rewards[t] + gamma * next_val * nd - values[t]
+        next_adv = delta + gamma * lam * nd * next_adv
+        adv[t] = next_adv
+        next_val = values[t]
+    return adv, adv + values
+
+
+@given(
+    T=st.integers(1, 20),
+    N=st.integers(1, 4),
+    gamma=st.floats(0.5, 0.999),
+    lam=st.floats(0.5, 1.0),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=25, deadline=None)
+def test_gae_matches_numpy(T, N, gamma, lam, seed):
+    rng = np.random.default_rng(seed)
+    rewards = rng.normal(size=(T, N)).astype(np.float32)
+    values = rng.normal(size=(T, N)).astype(np.float32)
+    dones = (rng.random((T, N)) < 0.2)
+    last_values = rng.normal(size=N).astype(np.float32)
+    adv, ret = gae(jnp.asarray(rewards), jnp.asarray(values),
+                   jnp.asarray(dones), jnp.asarray(last_values), gamma, lam)
+    adv_np, ret_np = gae_numpy(rewards, values, dones.astype(np.float32),
+                               last_values, gamma, lam)
+    np.testing.assert_allclose(adv, adv_np, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(ret, ret_np, atol=1e-4, rtol=1e-4)
+
+
+def test_gae_terminal_cuts_bootstrap():
+    """After done=1, no value flows backward across the boundary."""
+    rewards = jnp.array([[1.0], [0.0]])
+    values = jnp.array([[0.0], [100.0]])
+    dones = jnp.array([[True], [False]])
+    last = jnp.array([100.0])
+    adv, _ = gae(rewards, values, dones, last, gamma=0.99, lam=0.95)
+    # step 0 advantage must see only its own reward (episode ended)
+    np.testing.assert_allclose(adv[0, 0], 1.0, atol=1e-5)
+
+
+def test_ppo_improves_cartpole():
+    """Short-budget learning trend on CartPole (device pool, sync)."""
+    from repro.core.device_pool import DeviceEnvPool
+    from repro.envs.classic import CartPole
+    from repro.rl.ppo import PPOConfig, train_device
+
+    pool = DeviceEnvPool(CartPole(), 16, 16, mode="sync")
+    cfg = PPOConfig(total_steps=30_000, num_steps=64, minibatches=4,
+                    epochs=4, lr=1e-3)
+    _, _, hist = train_device(pool, cfg, seed=1, hidden=(64, 64))
+    early = np.nanmean([h["mean_return"] for h in hist[:5]])
+    late = np.nanmean([h["mean_return"] for h in hist[-5:]])
+    assert late > early + 20, (early, late)
+
+
+def test_ppo_async_pool_runs():
+    """PPO over the ASYNC pool (the paper's headline mode) trains without
+    error and routes env_ids correctly."""
+    from repro.core.device_pool import DeviceEnvPool
+    from repro.envs.mujoco_like import MujocoLike
+    from repro.rl.ppo import PPOConfig, train_device
+
+    pool = DeviceEnvPool(MujocoLike(), 16, 8, mode="async")
+    cfg = PPOConfig(total_steps=4_000, num_steps=32, minibatches=2,
+                    epochs=2, lr=3e-4)
+    _, _, hist = train_device(pool, cfg, seed=0, hidden=(32, 32))
+    assert len(hist) >= 10
+    assert all(np.isfinite(h["loss"]) for h in hist)

@@ -1,0 +1,102 @@
+"""End-to-end behaviour tests for the whole system."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+
+
+def test_lm_training_learns_markov(tmp_path):
+    """The full trainer must push loss toward the synthetic-corpus floor."""
+    out_json = str(tmp_path / "hist.json")
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "llama3.2-3b", "--smoke",
+        "--d-model", "128", "--layers", "2",
+        "--steps", "150", "--batch", "16", "--seq", "64",
+        "--lr", "3e-3", "--log-every", "25", "--out-json", out_json,
+    ]
+    proc = subprocess.run(cmd, env=ENV, capture_output=True, text=True,
+                          timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    hist = json.load(open(out_json))
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    assert last < first - 1.0, (first, last)
+
+
+def test_train_restart_is_deterministic(tmp_path):
+    """Fault tolerance: run 40 steps straight vs 20 + restart + 20 —
+    the final loss must match (deterministic data skip)."""
+    def run(steps, ckpt_dir, out):
+        cmd = [
+            sys.executable, "-m", "repro.launch.train",
+            "--arch", "qwen3-0.6b", "--smoke", "--d-model", "64",
+            "--layers", "2", "--steps", str(steps), "--batch", "4",
+            "--seq", "32", "--log-every", "1",
+            "--ckpt-dir", ckpt_dir, "--ckpt-every", "20",
+            "--out-json", out,
+        ]
+        p = subprocess.run(cmd, env=ENV, capture_output=True, text=True,
+                           timeout=600)
+        assert p.returncode == 0, p.stderr[-2000:]
+        return json.load(open(out))
+
+    h_straight = run(40, str(tmp_path / "a"), str(tmp_path / "a.json"))
+    run(20, str(tmp_path / "b"), str(tmp_path / "b1.json"))
+    h_resumed = run(40, str(tmp_path / "b"), str(tmp_path / "b2.json"))
+    final_a = [h for h in h_straight if h["step"] == 39][0]["loss"]
+    final_b = [h for h in h_resumed if h["step"] == 39][0]["loss"]
+    np.testing.assert_allclose(final_a, final_b, rtol=1e-4)
+
+
+def test_dryrun_cell_subprocess():
+    """One real dry-run cell end to end (512 host devices, production
+    mesh, lower+compile+analyses) — the harness contract, in miniature."""
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", "xlstm-125m", "--shape", "decode_32k",
+    ]
+    p = subprocess.run(cmd, env=ENV, capture_output=True, text=True,
+                       timeout=900)
+    assert p.returncode == 0, p.stderr[-2000:]
+    res = json.loads(p.stdout[p.stdout.index("{"):])
+    assert res["status"] == "ok"
+    assert res["devices"] == 256
+    assert res["roofline"]["dominant"] in ("compute", "memory", "collective")
+
+
+def test_dryrun_skip_rule():
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", "qwen3-0.6b", "--shape", "long_500k",
+    ]
+    p = subprocess.run(cmd, env=ENV, capture_output=True, text=True,
+                       timeout=300)
+    assert p.returncode == 0
+    res = json.loads(p.stdout[p.stdout.index("{"):])
+    assert res["status"] == "skipped"
+
+
+def test_ppo_host_profile_buckets():
+    """Fig-4 machinery: all four timing buckets populated."""
+    import repro
+    from repro.rl.ppo import PPOConfig, train_host
+
+    pool = repro.make("CartPole-v1", engine="thread", num_envs=4,
+                      batch_size=4, num_threads=2)
+    try:
+        cfg = PPOConfig(total_steps=4 * 16 * 2, num_steps=16,
+                        minibatches=2, epochs=2)
+        _, _, hist, prof = train_host(pool, pool.spec, cfg, seed=0,
+                                      hidden=(32,))
+    finally:
+        pool.close()
+    assert set(prof) >= {"env_step", "inference", "train", "other"}
+    assert all(v >= 0 for v in prof.values())
+    assert len(hist) >= 1
