@@ -2,19 +2,34 @@
 
 Engines × {AtariLike Pong (FPS = steps x frameskip 4), MujocoLike Ant
 (FPS = physics substeps, base 5)} × num_envs, random actions (paper §4.1).
-This container has 1 CPU core, so host-engine numbers play the paper's
+This container has few CPU cores, so host-engine numbers play the paper's
 "Laptop" column role; the device engine is the TPU-native contribution.
+
+``--mesh D`` benchmarks the multi-device scale-out instead: the
+ShardedDeviceEnvPool on the token env, weak scaling (fixed envs per
+shard, the paper's §4.1 protocol — more hardware hosts more envs),
+reporting aggregate FPS at mesh=1 vs mesh=D.  On CPU CI the mesh is
+simulated with ``XLA_FLAGS=--xla_force_host_platform_device_count`` —
+set *before* jax import, which is why this module only imports jax
+inside functions.
 """
 
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import time
 
 import numpy as np
 
 
 def fps_unit(task: str) -> str:
-    return "frames" if "Pong" in task else "physics-steps"
+    if "Pong" in task:
+        return "frames"
+    if "Token" in task:
+        return "tokens"
+    return "physics-steps"
 
 
 def bench_device(task: str, num_envs: int, batch_size: int, mode: str,
@@ -100,7 +115,77 @@ def run(csv_rows: list[str]) -> None:
         )
 
 
-if __name__ == "__main__":
+def bench_sharded(task: str, envs_per_shard: int, shards: int,
+                  steps: int = 40, iters: int = 3) -> float:
+    """Aggregate FPS of a ShardedDeviceEnvPool rollout (weak scaling)."""
+    import jax
+
+    from repro.core.registry import make
+    from repro.core.xla_loop import build_random_collect_fn
+
+    pool = make(task, num_envs=envs_per_shard * shards,
+                engine="device-sharded", num_shards=shards)
+    collect = build_random_collect_fn(pool, num_steps=steps)
+    ps, ts = pool.reset(jax.random.PRNGKey(0))
+    ps, ts, traj, _ = collect(ps, None, ts, jax.random.PRNGKey(1))  # warmup
+    jax.block_until_ready(traj.reward)
+    frames = 0.0
+    t0 = time.time()
+    for i in range(iters):
+        ps, ts, traj, _ = collect(ps, None, ts, jax.random.PRNGKey(2 + i))
+        frames += float(traj.step_cost.sum())
+    jax.block_until_ready(traj.reward)
+    return frames / (time.time() - t0)
+
+
+def run_mesh(mesh: int, task: str = "TokenCopy-v0", envs_per_shard: int = 16,
+             steps: int = 40, iters: int = 3) -> list[str]:
+    """Single-vs-multi-shard FPS table (the scale-out acceptance check)."""
     rows: list[str] = []
-    run(rows)
+    fps1 = bench_sharded(task, envs_per_shard, 1, steps, iters)
+    fpsD = bench_sharded(task, envs_per_shard, mesh, steps, iters)
+    unit = fps_unit(task)
+    rows.append(f"sharded_{task}_mesh1_N{envs_per_shard},"
+                f"{1e6/max(fps1,1e-9):.3f},{fps1:.0f} {unit}/s")
+    rows.append(f"sharded_{task}_mesh{mesh}_N{envs_per_shard * mesh},"
+                f"{1e6/max(fpsD,1e-9):.3f},{fpsD:.0f} {unit}/s")
+    rows.append(f"sharded_{task}_SPEEDUP,{fpsD / max(fps1, 1e-9):.2f},"
+                f"mesh{mesh} vs mesh1 aggregate")
+    return rows
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="benchmark ShardedDeviceEnvPool at this mesh size "
+                         "(0 = run the full engine table instead)")
+    ap.add_argument("--task", default="TokenCopy-v0")
+    ap.add_argument("--envs-per-shard", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for the CI smoke (~2s)")
+    args = ap.parse_args(argv)
+
+    rows: list[str] = []
+    if args.mesh:
+        # must precede ANY jax import in this process
+        if "jax" in sys.modules:
+            raise RuntimeError("--mesh requires jax to not be imported yet")
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count={args.mesh}"
+            ).strip()
+        if args.smoke:
+            args.envs_per_shard, args.steps, args.iters = 16, 10, 1
+        rows = run_mesh(args.mesh, args.task, args.envs_per_shard,
+                        args.steps, args.iters)
+    else:
+        run(rows)
     print("\n".join(rows))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

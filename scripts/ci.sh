@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 CI: full test suite + a multi-device throughput smoke.
+#
+#   ./scripts/ci.sh            # everything
+#   CI_SKIP_BENCH=1 ./scripts/ci.sh   # tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+if [ -z "${CI_SKIP_BENCH:-}" ]; then
+    echo "== sharded-engine smoke (mesh=4, simulated host devices) =="
+    python benchmarks/bench_throughput.py --mesh 4 --smoke
+fi
+echo "CI OK"

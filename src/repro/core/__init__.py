@@ -1,7 +1,15 @@
 # The paper's primary contribution: the EnvPool execution engine,
 # re-built TPU-native in JAX (DESIGN.md §2).
 from repro.core.device_pool import DeviceEnvPool, PoolState, make_pool
-from repro.core.registry import list_envs, make, make_py, register, register_py
+from repro.core.registry import (
+    list_engines,
+    list_envs,
+    make,
+    make_py,
+    register,
+    register_py,
+)
+from repro.core.sharded_pool import ShardedDeviceEnvPool, make_env_mesh
 from repro.core.specs import ArraySpec, EnvSpec, TimeStep
 from repro.core.dm_api import DmEnv
 from repro.core.xla_loop import build_collect_fn, build_random_collect_fn
@@ -12,11 +20,14 @@ __all__ = [
     "DmEnv",
     "EnvSpec",
     "PoolState",
+    "ShardedDeviceEnvPool",
     "TimeStep",
     "build_collect_fn",
     "build_random_collect_fn",
+    "list_engines",
     "list_envs",
     "make",
+    "make_env_mesh",
     "make_pool",
     "make_py",
     "register",

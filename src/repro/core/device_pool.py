@@ -47,6 +47,15 @@ READY = 2            # unconsumed result available
 _BIG = jnp.float32(1e9)
 
 
+def derive_env_keys(key: jax.Array, num_envs: int) -> tuple[jax.Array, jax.Array]:
+    """``(env_keys, pool_rng)`` from one seed key — THE formula every
+    engine shares, so identical seeds give identical per-env init states
+    across device, sharded, and host engines (engine-conformance
+    contract, tests/test_conformance.py)."""
+    rng, sub = jax.random.split(key)
+    return jax.random.split(sub, num_envs), rng
+
+
 @pytree_dataclass
 class PoolState:
     env_states: Any            # pytree, leading dim N
@@ -103,9 +112,17 @@ class DeviceEnvPool:
     # ------------------------------------------------------------------ #
     def init(self, key: jax.Array) -> PoolState:
         """async_reset (paper A.3): every env resets; all N results READY."""
-        rng, sub = jax.random.split(key)
-        keys = jax.random.split(sub, self.num_envs)
-        env_states = jax.vmap(self.env.init_state)(keys)
+        env_keys, rng = derive_env_keys(key, self.num_envs)
+        return self.init_from_keys(env_keys, rng)
+
+    def init_from_keys(self, env_keys: jax.Array, rng: jax.Array) -> PoolState:
+        """Init from externally-derived per-env keys.
+
+        ``ShardedDeviceEnvPool`` uses this so that the per-env key
+        assignment — and hence every env's trajectory — is independent of
+        how the pool is sharded across devices.
+        """
+        env_states = jax.vmap(self.env.init_state)(env_keys)
         N = self.num_envs
         act = self.spec.act_spec
         return PoolState(

@@ -46,7 +46,7 @@ class JittedHostEnv(HostEnv):
     property that lets EnvPool's C++ envs scale across threads.
     """
 
-    def __init__(self, env, seed: int = 0):
+    def __init__(self, env, seed: int = 0, init_key=None):
         import jax
 
         self._env = env
@@ -54,13 +54,30 @@ class JittedHostEnv(HostEnv):
         self._jit_step = jax.jit(env.step)
         self._jit_init = jax.jit(env.init_state)
         self._seed = seed
+        # explicit init key: lets ``make()`` give host and device engines
+        # the SAME per-env reset keys (engine-conformance contract) —
+        # after the first reset the env's own rng chain takes over, so
+        # auto-resets stay aligned too
+        self._init_key = None if init_key is None else np.asarray(init_key)
+        self._resets = 0
         self._state = None
 
     def reset(self) -> np.ndarray:
         import jax
+        import jax.numpy as jnp
 
-        self._seed += 1
-        self._state = self._jit_init(jax.random.PRNGKey(self._seed))
+        if self._init_key is not None:
+            # first reset uses the key verbatim (conformance with the
+            # device engines); later resets fold in a counter so repeated
+            # resets still give fresh episodes
+            key = jnp.asarray(self._init_key)
+            if self._resets:
+                key = jax.random.fold_in(key, self._resets)
+        else:
+            self._seed += 1
+            key = jax.random.PRNGKey(self._seed)
+        self._resets += 1
+        self._state = self._jit_init(key)
         return np.asarray(self._env.observe(self._state))
 
     def step(self, action):

@@ -2,17 +2,34 @@
 
     env = make("Pong-v5", num_envs=100)                 # device pool, sync
     env = make("Pong-v5", num_envs=100, batch_size=90)  # device pool, async
+    env = make("TokenCopy-v0", num_envs=256,
+               engine="device-sharded", num_shards=4)   # multi-device pool
     env = make("Ant-v3", engine="thread", num_envs=64)  # host thread pool
     env = make("Ant-v3", engine="subprocess", ...)      # gym.vector baseline
 
-Engines: ``device`` (TPU-native, default), ``device-masked`` (tick
-ablation), ``thread`` (paper-faithful C++-pool port), ``subprocess``,
-``forloop``, and the pure-Python single-env classes via ``py_env``.
+One spec-driven front-end constructs every engine:
+
+  engine            pool class              execution substrate
+  ----------------  ----------------------  ---------------------------------
+  device (default)  DeviceEnvPool           vmap lanes, one device
+  device-masked     DeviceEnvPool(masked)   tick ablation, one device
+  device-sharded    ShardedDeviceEnvPool    shard_map over a device mesh
+  thread            ThreadEnvPool           host threads (paper's C++ pool)
+  forloop           ForLoopEnv              sequential baseline (Table 1)
+  subprocess        SubprocessEnv           gym.vector-style workers
+
+Engine conformance: all engines derive per-env init keys the same way
+(``split(split(PRNGKey(seed))[1], num_envs)``), so with deterministic
+actions routed by ``env_id`` they emit identical reward/done streams —
+asserted in tests/test_conformance.py.  Pure-Python single-env classes
+are reachable via ``make_py``.
 """
 
 from __future__ import annotations
 
 from typing import Any, Callable
+
+import numpy as np
 
 from repro.core.device_pool import DeviceEnvPool
 from repro.envs.base import Environment
@@ -20,6 +37,11 @@ from repro.envs.base import Environment
 _REGISTRY: dict[str, Callable[..., Environment]] = {}
 _PY_REGISTRY: dict[str, Callable[..., Any]] = {}
 _DEFAULTS_DONE = False
+
+ENGINES = (
+    "device", "device-masked", "device-sharded",
+    "thread", "forloop", "subprocess",
+)
 
 
 def register(name: str, factory: Callable[..., Environment]) -> None:
@@ -35,11 +57,25 @@ def list_envs() -> list[str]:
     return sorted(_REGISTRY)
 
 
+def list_engines() -> tuple[str, ...]:
+    return ENGINES
+
+
 def _jax_env(task_id: str, **kwargs: Any) -> Environment:
     _ensure_defaults()
     if task_id not in _REGISTRY:
         raise KeyError(f"unknown env {task_id!r}; known: {list_envs()}")
     return _REGISTRY[task_id](**kwargs)
+
+
+def _host_env_keys(seed: int, num_envs: int) -> np.ndarray:
+    """Per-env init keys matching ``DeviceEnvPool.init(PRNGKey(seed))``."""
+    import jax
+
+    from repro.core.device_pool import derive_env_keys
+
+    keys, _ = derive_env_keys(jax.random.PRNGKey(seed), num_envs)
+    return np.asarray(keys)
 
 
 def make(
@@ -48,6 +84,8 @@ def make(
     batch_size: int | None = None,
     engine: str = "device",
     num_threads: int | None = None,
+    num_shards: int | None = None,
+    mesh: Any = None,
     seed: int = 0,
     **env_kwargs: Any,
 ):
@@ -59,11 +97,24 @@ def make(
             mode = "sync" if batch_size in (None, num_envs) else "async"
         return DeviceEnvPool(env, num_envs, batch_size, mode=mode)
 
+    if engine == "device-sharded":
+        from repro.core.sharded_pool import ShardedDeviceEnvPool
+
+        env = _jax_env(task_id, **env_kwargs)
+        return ShardedDeviceEnvPool(
+            env, num_envs, batch_size,
+            mesh=mesh if mesh is not None else num_shards,
+        )
+
     if engine == "thread":
         from repro.core.host_pool import JittedHostEnv, ThreadEnvPool
 
+        keys = _host_env_keys(seed, num_envs)
         fns = [
-            (lambda i=i: JittedHostEnv(_jax_env(task_id, **env_kwargs), seed=seed + i))
+            (lambda i=i: JittedHostEnv(
+                _jax_env(task_id, **env_kwargs), seed=seed + i,
+                init_key=keys[i],
+            ))
             for i in range(num_envs)
         ]
         return ThreadEnvPool(fns, batch_size=batch_size, num_threads=num_threads)
@@ -72,8 +123,12 @@ def make(
         from repro.core.baselines import ForLoopEnv
         from repro.core.host_pool import JittedHostEnv
 
+        keys = _host_env_keys(seed, num_envs)
         fns = [
-            (lambda i=i: JittedHostEnv(_jax_env(task_id, **env_kwargs), seed=seed + i))
+            (lambda i=i: JittedHostEnv(
+                _jax_env(task_id, **env_kwargs), seed=seed + i,
+                init_key=keys[i],
+            ))
             for i in range(num_envs)
         ]
         return ForLoopEnv(fns)
@@ -83,13 +138,14 @@ def make(
 
         env = _jax_env(task_id, **env_kwargs)
         return SubprocessEnv(
-            _SpawnFactory(task_id, seed, env_kwargs),
+            _SpawnFactory(task_id, seed, env_kwargs,
+                          _host_env_keys(seed, num_envs)),
             num_envs,
             num_workers=num_threads,
             spec=env.spec,
         )
 
-    raise ValueError(f"unknown engine {engine!r}")
+    raise ValueError(f"unknown engine {engine!r}; known: {ENGINES}")
 
 
 def make_py(task_id: str, seed: int = 0, **kwargs: Any):
@@ -103,16 +159,20 @@ def make_py(task_id: str, seed: int = 0, **kwargs: Any):
 class _SpawnFactory:
     """Picklable env factory for spawn-based subprocess workers."""
 
-    def __init__(self, task_id: str, seed: int, env_kwargs: dict[str, Any]):
+    def __init__(self, task_id: str, seed: int, env_kwargs: dict[str, Any],
+                 init_keys: np.ndarray | None = None):
         self.task_id = task_id
         self.seed = seed
         self.env_kwargs = env_kwargs
+        self.init_keys = init_keys
 
     def __call__(self, i: int):
         from repro.core.host_pool import JittedHostEnv
 
+        key = None if self.init_keys is None else self.init_keys[i]
         return JittedHostEnv(
-            _jax_env(self.task_id, **self.env_kwargs), seed=self.seed + i
+            _jax_env(self.task_id, **self.env_kwargs), seed=self.seed + i,
+            init_key=key,
         )
 
 
@@ -149,4 +209,3 @@ def _ensure_defaults() -> None:
     register_py("Pendulum-v1", PyPendulum)
     register_py("Pong-v5", PyAtariLike)
     register_py("Ant-v3", PyMujocoLike)
-

@@ -4,6 +4,11 @@ The paper exposes ``handle, recv, send, step = env.xla()`` so the whole
 collect loop lowers into XLA and runs free of the Python GIL.  Here the
 pool already lives on-device, so the actor loop is a single ``lax.scan``
 — the logical conclusion of Appendix E: *zero* host round-trips.
+
+Works with any device engine: ``DeviceEnvPool`` (one device) or
+``ShardedDeviceEnvPool`` (shard_map over a mesh) — the sharded pool's
+``step`` keeps the state and the batch device-resident per shard, so the
+whole scan stays gather-free across devices.
 """
 
 from __future__ import annotations
@@ -17,9 +22,13 @@ from jax import lax
 from repro.core.device_pool import DeviceEnvPool, PoolState
 from repro.core.specs import TimeStep
 
+# any object with spec/batch_size/step/reset (DeviceEnvPool or
+# ShardedDeviceEnvPool — kept structural to avoid an import cycle)
+DevicePool = Any
+
 
 def build_collect_fn(
-    pool: DeviceEnvPool,
+    pool: DevicePool,
     policy_fn: Callable[[Any, Any, jax.Array], Any],
     num_steps: int,
     donate: bool = True,
@@ -48,7 +57,7 @@ def build_collect_fn(
     return jax.jit(collect, **kwargs)
 
 
-def build_random_collect_fn(pool: DeviceEnvPool, num_steps: int):
+def build_random_collect_fn(pool: DevicePool, num_steps: int):
     """Random-action collect loop — the paper's pure-simulation benchmark
     (§4.1: "randomly sampled actions as inputs")."""
 
@@ -61,7 +70,7 @@ def build_random_collect_fn(pool: DeviceEnvPool, num_steps: int):
     return build_collect_fn(pool, policy, num_steps)
 
 
-def frames_per_batch(pool: DeviceEnvPool) -> int:
+def frames_per_batch(pool: DevicePool) -> int:
     """Frames produced by one recv: batch_size steps × frameskip
     (paper counts Atari FPS with frameskip 4, MuJoCo with 5 substeps)."""
     return pool.batch_size * pool.spec.min_cost

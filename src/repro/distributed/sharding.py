@@ -294,6 +294,30 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+# --------------------------------------------------------------------- #
+# env-pool sharding (core/sharded_pool.py)
+# --------------------------------------------------------------------- #
+# The ShardedDeviceEnvPool stacks every PoolState leaf with a leading
+# per-shard dim; that dim maps to the pool's mesh axis, everything else
+# replicates.  Expressed through the same RuleSet/resolve machinery as
+# the model layouts so divisibility fallback and axis bookkeeping are
+# shared.
+ENVPOOL_RULES = RuleSet({"env_shard": "env"}, name="envpool")
+
+
+def pool_state_shardings(mesh: Mesh, state_shape: Any,
+                         rules: RuleSet = ENVPOOL_RULES) -> Any:
+    """NamedShardings for a stacked-by-shard pool state pytree."""
+
+    def one(leaf):
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        names = ("env_shard",) + (None,) * (leaf.ndim - 1)
+        return NamedSharding(mesh, resolve(mesh, leaf.shape, names, rules))
+
+    return jax.tree.map(one, state_shape)
+
+
 def bytes_per_device(tree_shape: Any, shardings: Any, mesh: Mesh) -> int:
     """Estimate per-device bytes of a sharded pytree (for reports)."""
     total = 0

@@ -54,8 +54,8 @@ def _flash_kernel(
 
     def body(ki, carry):
         m_prev, l_prev, acc = carry
-        k = pl.load(k_ref, (0, 0, pl.ds(ki * block_k, block_k), slice(None)))
-        v = pl.load(v_ref, (0, 0, pl.ds(ki * block_k, block_k), slice(None)))
+        k = k_ref[0, 0, pl.ds(ki * block_k, block_k), :]
+        v = v_ref[0, 0, pl.ds(ki * block_k, block_k), :]
         s = q @ k.astype(jnp.float32).T                    # (block_q, block_k)
         k_pos = ki * block_k + lax.broadcasted_iota(
             jnp.int32, (block_q, block_k), 1
@@ -67,7 +67,10 @@ def _flash_kernel(
             mask &= k_pos > q_pos - window
         s = jnp.where(mask, s, NEG_INF)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
-        p = jnp.exp(s - m_new[:, None])
+        # rows whose visible window misses this whole block have
+        # s == m_new == NEG_INF and exp(s - m_new) would be 1, not 0 —
+        # re-mask p so fully-masked (row, block) pairs contribute nothing
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
         corr = jnp.exp(m_prev - m_new)
         l_new = l_prev * corr + jnp.sum(p, axis=-1)
         acc = acc * corr[:, None] + p @ v.astype(jnp.float32)

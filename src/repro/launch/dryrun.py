@@ -187,7 +187,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, rules_name: str,
     t_compile = time.time() - t0 - t_lower
 
     # ---- analyses -------------------------------------------------- #
-    cost = compiled.cost_analysis() or {}
+    from repro.distributed.analytic import xla_cost_dict
+
+    cost = xla_cost_dict(compiled)
     flops_dev = float(cost.get("flops", 0.0))
     bytes_dev = float(cost.get("bytes accessed", 0.0))
 

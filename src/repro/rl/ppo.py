@@ -3,7 +3,9 @@ end-to-end integration.  Two drivers:
 
   * ``train_device``: fully on-device — collect via the jitted pool
     (``lax.scan``, paper App. E) and update via jitted PPO epochs; the
-    only host sync per iteration is metrics.
+    only host sync per iteration is metrics.  Accepts either
+    ``DeviceEnvPool`` or ``ShardedDeviceEnvPool`` (multi-device collect:
+    the env state stays sharded across the mesh for the whole scan).
   * ``train_host``: numpy loop over a host engine (thread / subprocess /
     for-loop) with the SAME jitted update — this is the configuration the
     paper's Figure 4 profiles (env-step vs inference vs train vs other
@@ -117,7 +119,7 @@ def make_ppo_update(net: ActorCritic, cfg: PPOConfig, total_updates: int):
 # fully on-device driver
 # --------------------------------------------------------------------- #
 def train_device(
-    pool: DeviceEnvPool,
+    pool: "DeviceEnvPool | Any",   # DeviceEnvPool or ShardedDeviceEnvPool
     cfg: PPOConfig,
     seed: int = 0,
     log_fn: Callable[[dict], None] | None = None,

@@ -1,0 +1,111 @@
+"""Hypothesis-free property-test shim.
+
+The tier-1 container does not ship ``hypothesis``.  This module provides
+the tiny subset the suite uses (``given`` / ``settings`` /
+``strategies.{integers,floats,sampled_from}``) backed by seeded
+``np.random`` draws expanded into ``pytest.mark.parametrize`` cases, so
+the same test bodies run unmodified either way.  Test modules fall back
+to it with::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _propshim import given, settings, strategies as st
+
+Draws are deterministic (seeded from the test name) so failures are
+reproducible across runs; no shrinking, no database — just N examples.
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Any, Callable
+
+import numpy as np
+import pytest
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A draw rule: ``draw(rng) -> value``."""
+
+    def __init__(self, draw: Callable[[np.random.Generator], Any], label: str):
+        self._draw = draw
+        self.label = label
+
+    def draw(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"_Strategy({self.label})"
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (the used subset)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            f"integers({min_value},{max_value})",
+        )
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_: Any) -> _Strategy:
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)),
+            f"floats({min_value},{max_value})",
+        )
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elems = list(elements)
+        return _Strategy(
+            lambda rng: elems[int(rng.integers(len(elems)))],
+            f"sampled_from({elems!r:.40})",
+        )
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_: Any):
+    """Records ``max_examples`` on the test fn for ``given`` to pick up.
+
+    Must be applied BELOW ``@given`` (i.e. run first), matching how the
+    suite writes it — the same order hypothesis accepts.
+    """
+
+    def deco(fn):
+        fn._propshim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    """Expand strategies into ``max_examples`` parametrized cases."""
+
+    def deco(fn):
+        n = getattr(fn, "_propshim_max_examples", _DEFAULT_MAX_EXAMPLES)
+        # stable per-test seed -> reproducible draws independent of
+        # collection order
+        seed = zlib.crc32(fn.__name__.encode())
+        rng = np.random.default_rng(seed)
+        examples = []
+        for _ in range(n):
+            args = tuple(s.draw(rng) for s in arg_strategies)
+            kwargs = {k: s.draw(rng) for k, s in kw_strategies.items()}
+            examples.append((args, kwargs))
+
+        @pytest.mark.parametrize(
+            "_propshim_example", examples, ids=[str(i) for i in range(n)]
+        )
+        def wrapper(_propshim_example):
+            args, kwargs = _propshim_example
+            return fn(*args, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

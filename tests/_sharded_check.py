@@ -1,0 +1,97 @@
+"""Subprocess helper for tests/test_sharded_pool.py.
+
+The tier-1 suite runs on ONE device (conftest harness contract), so the
+multi-device assertions run here, in a fresh interpreter that forces D
+simulated host devices before jax locks the platform.  Prints one JSON
+object; the parent test asserts on it.
+
+Usage: python tests/_sharded_check.py [D]
+"""
+
+import json
+import os
+import sys
+
+D = int(sys.argv[1]) if len(sys.argv) > 1 else 4
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={D} "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.registry import make  # noqa: E402
+from repro.core.sharded_pool import ShardedDeviceEnvPool  # noqa: E402
+from repro.core.xla_loop import build_random_collect_fn  # noqa: E402
+
+STEPS = 8
+N_PER_SHARD = 4
+
+
+def sync_rollout(task: str, shards: int):
+    """Deterministic scripted rollout; returns stacked per-step arrays."""
+    pool = make(task, num_envs=N_PER_SHARD * D, engine="device-sharded",
+                num_shards=shards)
+    env = pool.env
+    hi = int(env.spec.act_spec.maximum) if env.spec.act_spec.maximum else 1
+    ps, ts = pool.reset(jax.random.PRNGKey(0))
+    step = jax.jit(pool.step)
+    obs, rew, done, ids = [], [], [], []
+    for t in range(STEPS):
+        a = ((ts.env_id * 7 + t) % (hi + 1)).astype(env.spec.act_spec.dtype)
+        ps, ts = step(ps, a, ts.env_id)
+        obs.append(np.asarray(ts.obs))
+        rew.append(np.asarray(ts.reward))
+        done.append(np.asarray(ts.done))
+        ids.append(np.asarray(ts.env_id))
+    return map(np.stack, (obs, rew, done, ids))
+
+
+def main() -> dict:
+    res: dict = {"devices": len(jax.devices()), "mesh": D}
+
+    # 1) shard-count invariance: sync rollouts bitwise-equal at mesh 1 vs D
+    for task in ("TokenCopy-v0", "CartPole-v1"):
+        o1, r1, d1, i1 = sync_rollout(task, 1)
+        oD, rD, dD, iD = sync_rollout(task, D)
+        res[f"equal_{task}"] = bool(
+            np.array_equal(o1, oD) and np.array_equal(r1, rD)
+            and np.array_equal(d1, dD) and np.array_equal(i1, iD)
+        )
+
+    # 2) jitted lax.scan rollout across the mesh
+    pool = make("TokenCopy-v0", num_envs=4 * D, engine="device-sharded",
+                num_shards=D)
+    collect = build_random_collect_fn(pool, num_steps=6)
+    ps, ts = pool.reset(jax.random.PRNGKey(1))
+    ps, ts, traj, _ = collect(ps, None, ts, jax.random.PRNGKey(2))
+    res["scan_shape_ok"] = bool(traj.reward.shape == (6, 4 * D))
+    res["scan_finite"] = bool(np.isfinite(np.asarray(traj.reward)).all())
+
+    # 3) async mode across shards: every batch has M unique global ids
+    pool = make("TokenCopy-v0", num_envs=4 * D, batch_size=2 * D,
+                engine="device-sharded", num_shards=D)
+    ps, ts = pool.reset(jax.random.PRNGKey(3))
+    uniq = True
+    for t in range(6):
+        ids = np.asarray(ts.env_id)
+        uniq &= len(set(ids.tolist())) == 2 * D
+        a = ((ts.env_id + t) % 256).astype(jnp.int32)
+        ps, ts = pool.step(ps, a, ts.env_id)
+    res["async_unique_ids"] = bool(uniq)
+
+    # 4) divisibility validation needs a real multi-device mesh
+    try:
+        env = pool.env
+        ShardedDeviceEnvPool(env, num_envs=D + 1, mesh=D)
+        res["divisibility_raises"] = False
+    except ValueError:
+        res["divisibility_raises"] = True
+    return res
+
+
+if __name__ == "__main__":
+    print(json.dumps(main()))

@@ -9,7 +9,12 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.distributed.analytic import cell_cost, fwd_flops, param_bytes
+from repro.distributed.analytic import (
+    cell_cost,
+    fwd_flops,
+    param_bytes,
+    xla_cost_dict,
+)
 from repro.models import ShapeSpec, build_model
 from repro.models.common import count_params
 
@@ -43,7 +48,7 @@ def test_fwd_flops_vs_xla_unrolled(arch):
 
     lowered = jax.jit(fwd_only).lower(params, specs)
     compiled = lowered.compile()
-    xla_flops = float(compiled.cost_analysis().get("flops", 0))
+    xla_flops = float(xla_cost_dict(compiled).get("flops", 0))
 
     pred = float(sum(fwd_flops(cfg, shape).values()))
     ratio = xla_flops / pred

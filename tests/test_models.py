@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 container has no hypothesis
+    from _propshim import given, settings, strategies as st
 
 from repro.configs import get_config, get_smoke_config, list_archs
 from repro.models import ShapeSpec, build_model

@@ -3,7 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 container has no hypothesis
+    from _propshim import given, settings, strategies as st
 
 from repro.optim import adamw, clip_by_global_norm, global_norm, linear_warmup_cosine
 from repro.optim.compression import (

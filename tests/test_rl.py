@@ -3,7 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 container has no hypothesis
+    from _propshim import given, settings, strategies as st
 
 from repro.rl.gae import gae
 
