@@ -5,6 +5,11 @@ Engines × {AtariLike Pong (FPS = steps x frameskip 4), MujocoLike Ant
 This container has few CPU cores, so host-engine numbers play the paper's
 "Laptop" column role; the device engine is the TPU-native contribution.
 
+``--ab`` benchmarks the batched-native hot path against the forced
+vmap-lifting adapter on MujocoLike Ant (the CI regression guard for the
+batched-env rewrite); every mode writes its rows to
+``BENCH_throughput.json`` at the repo root.
+
 ``--mesh D`` benchmarks the multi-device scale-out instead: the
 ShardedDeviceEnvPool on the token env, weak scaling (fixed envs per
 shard, the paper's §4.1 protocol — more hardware hosts more envs),
@@ -17,11 +22,14 @@ inside functions.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
 
 import numpy as np
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def fps_unit(task: str) -> str:
@@ -33,7 +41,8 @@ def fps_unit(task: str) -> str:
 
 
 def bench_device(task: str, num_envs: int, batch_size: int, mode: str,
-                 steps: int = 60, iters: int = 3) -> float:
+                 steps: int = 60, iters: int = 3,
+                 batched: bool | None = None) -> float:
     import jax
 
     from repro.core.device_pool import DeviceEnvPool
@@ -41,7 +50,8 @@ def bench_device(task: str, num_envs: int, batch_size: int, mode: str,
     from repro.core.xla_loop import build_random_collect_fn
 
     env = _jax_env(task)
-    pool = DeviceEnvPool(env, num_envs, batch_size, mode=mode)
+    pool = DeviceEnvPool(env, num_envs, batch_size, mode=mode,
+                         batched=batched)
     collect = build_random_collect_fn(pool, num_steps=steps)
     ps, ts = pool.reset(jax.random.PRNGKey(0))
     ps, ts, traj, _ = collect(ps, None, ts, jax.random.PRNGKey(1))
@@ -154,20 +164,79 @@ def run_mesh(mesh: int, task: str = "TokenCopy-v0", envs_per_shard: int = 16,
     return rows
 
 
+def run_ab(task: str = "Ant-v3", num_envs: int = 64, steps: int = 40,
+           iters: int = 3) -> tuple[list[str], dict]:
+    """Batched-native vs forced-vmap A/B on the same sync pool — the
+    hot-path regression guard for the batched-env rewrite.  On TPU the
+    batched side is the compiled Pallas kernel; on CPU it is the fused
+    masked-loop path (same jaxpr as vmap by design, so the guard bounds
+    engine-level overhead rather than kernel speedup)."""
+    fps_vmap = bench_device(task, num_envs, num_envs, "sync",
+                            steps=steps, iters=iters, batched=False)
+    fps_bat = bench_device(task, num_envs, num_envs, "sync",
+                           steps=steps, iters=iters, batched=None)
+    ratio = fps_bat / max(fps_vmap, 1e-9)
+    unit = fps_unit(task)
+    rows = [
+        f"ab_{task}_vmap_N{num_envs},{1e6/max(fps_vmap,1e-9):.3f},"
+        f"{fps_vmap:.0f} {unit}/s",
+        f"ab_{task}_batched_N{num_envs},{1e6/max(fps_bat,1e-9):.3f},"
+        f"{fps_bat:.0f} {unit}/s",
+        f"ab_{task}_RATIO,{ratio:.3f},batched/vmap FPS",
+    ]
+    summary = {
+        "task": task,
+        "num_envs": num_envs,
+        "vmap_fps": fps_vmap,
+        "batched_fps": fps_bat,
+        "ratio": ratio,
+    }
+    return rows, summary
+
+
+def write_json(rows: list[str], extra: dict | None = None,
+               path: str | None = None) -> str:
+    """Persist the bench rows (and any mode-specific summary) as the
+    BENCH_throughput.json artifact."""
+    path = path or os.path.join(ROOT, "BENCH_throughput.json")
+    payload = {
+        "benchmark": "throughput",
+        "rows": [
+            dict(zip(("name", "us_per_unit", "note"), r.split(",", 2)))
+            for r in rows
+        ],
+    }
+    if extra:
+        payload.update(extra)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return path
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mesh", type=int, default=0,
                     help="benchmark ShardedDeviceEnvPool at this mesh size "
                          "(0 = run the full engine table instead)")
+    ap.add_argument("--ab", action="store_true",
+                    help="batched-native vs vmap-lifted A/B on MujocoLike")
     ap.add_argument("--task", default="TokenCopy-v0")
     ap.add_argument("--envs-per-shard", type=int, default=16)
+    ap.add_argument("--num-envs", type=int, default=64)
     ap.add_argument("--steps", type=int, default=40)
     ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--min-ab-ratio", type=float, default=0.0,
+                    help="fail (exit 1) if batched/vmap FPS ratio drops "
+                         "below this (CI regression gate)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for the CI smoke (~2s)")
+    ap.add_argument("--json", default=None,
+                    help="output path (default: <repo>/BENCH_throughput.json)")
     args = ap.parse_args(argv)
 
     rows: list[str] = []
+    extra: dict = {}
     if args.mesh:
         # must precede ANY jax import in this process
         if "jax" in sys.modules:
@@ -181,9 +250,27 @@ def main(argv: list[str] | None = None) -> int:
             args.envs_per_shard, args.steps, args.iters = 16, 10, 1
         rows = run_mesh(args.mesh, args.task, args.envs_per_shard,
                         args.steps, args.iters)
+        extra = {"mode": "mesh", "mesh": args.mesh}
+    elif args.ab:
+        if args.smoke:
+            args.num_envs, args.steps, args.iters = 32, 10, 1
+        task = args.task if args.task != "TokenCopy-v0" else "Ant-v3"
+        rows, summary = run_ab(task, args.num_envs, args.steps, args.iters)
+        extra = {"mode": "ab", "ab": summary}
     else:
         run(rows)
+        extra = {"mode": "table"}
     print("\n".join(rows))
+    path = write_json(rows, extra, args.json)
+    print(f"[bench] wrote {path}")
+    # gate only when the A/B branch actually ran (--mesh wins over --ab)
+    if extra.get("mode") == "ab" and args.min_ab_ratio > 0:
+        ratio = extra["ab"]["ratio"]
+        if ratio < args.min_ab_ratio:
+            print(f"[bench] FAIL: batched/vmap ratio {ratio:.3f} < "
+                  f"{args.min_ab_ratio}")
+            return 1
+        print(f"[bench] ratio {ratio:.3f} >= {args.min_ab_ratio} OK")
     return 0
 
 

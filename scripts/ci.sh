@@ -14,5 +14,12 @@ python -m pytest -x -q
 if [ -z "${CI_SKIP_BENCH:-}" ]; then
     echo "== sharded-engine smoke (mesh=4, simulated host devices) =="
     python benchmarks/bench_throughput.py --mesh 4 --smoke
+
+    echo "== batched-vs-vmap hot-path A/B smoke (Ant-v3) =="
+    # regression gate for the batched-native env layer: the fused path
+    # must not fall behind the forced vmap-lifting baseline (0.7 floor
+    # absorbs 2-core CI timer noise; real regressions are step changes).
+    # Writes BENCH_throughput.json with the A/B numbers.
+    python benchmarks/bench_throughput.py --ab --smoke --min-ab-ratio 0.7
 fi
 echo "CI OK"

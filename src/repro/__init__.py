@@ -10,8 +10,15 @@ import time).
 __version__ = "0.1.0"
 
 
+_CORE_EXPORTS = (
+    "make", "make_py", "DmEnv", "EnvPool", "FunctionalEnvPool", "bind",
+    "is_functional", "to_timestep", "build_collect_fn",
+    "build_random_collect_fn", "collect_init", "list_engines", "list_envs",
+)
+
+
 def __getattr__(name):
-    if name in ("make", "make_py"):
+    if name in _CORE_EXPORTS:
         from repro import core
 
         return getattr(core, name)

@@ -7,7 +7,9 @@
   benchmarks against (Brockman et al. 2016).
 
 Both are synchronous (M = N) and return the same dict layout as
-ThreadEnvPool.recv for drop-in benchmarking.
+ThreadEnvPool.recv for drop-in benchmarking; both also satisfy the
+``core.protocol.EnvPool`` contract (send parks a batch, recv executes
+it) so protocol-driven code runs unchanged over them.
 """
 
 from __future__ import annotations
@@ -36,7 +38,38 @@ def _result_dict(n, obs_spec):
     }
 
 
-class ForLoopEnv:
+class _SyncSendRecv:
+    """send/recv facade for synchronous engines (EnvPool protocol):
+    ``send`` parks one full batch of actions, ``recv`` executes it.
+    Exactly one send may be outstanding (M == N: there is only one
+    block in flight by construction)."""
+
+    _pending: "tuple | None" = None
+
+    def send(self, actions, env_ids=None) -> None:
+        if self._pending is not None:
+            raise RuntimeError(
+                "send() called twice without recv() on a sync engine"
+            )
+        self._pending = (np.asarray(actions), env_ids)
+
+    def recv(self) -> dict[str, np.ndarray]:
+        if self._pending is None:
+            raise RuntimeError("recv() without a pending send()/async_reset()")
+        pending, self._pending = self._pending, None
+        if pending == "reset":
+            return self.reset()
+        actions, env_ids = pending
+        return self.step(actions, env_ids)
+
+    def async_reset(self) -> None:
+        """Paper A.3 analogue: park a reset; the next recv returns it."""
+        if self._pending is not None:
+            raise RuntimeError("async_reset() with a send() outstanding")
+        self._pending = "reset"
+
+
+class ForLoopEnv(_SyncSendRecv):
     """Paper Table 1 row 1: single-thread sequential stepping."""
 
     def __init__(self, env_fns: list[Callable[[], HostEnv]]):
@@ -44,6 +77,7 @@ class ForLoopEnv:
         self.num_envs = len(self._envs)
         self.batch_size = self.num_envs
         self.spec = self._envs[0].spec
+        self._pending = None
 
     def reset(self) -> dict[str, np.ndarray]:
         out = _result_dict(self.num_envs, self.spec.obs_spec)
@@ -98,7 +132,7 @@ def _subproc_worker(conn, shm_name, shape, dtype_str, lo, hi, factory_bytes):
         conn.close()
 
 
-class SubprocessEnv:
+class SubprocessEnv(_SyncSendRecv):
     """Paper Table 1 row 2: multiprocessing with shared-memory obs."""
 
     def __init__(
@@ -144,6 +178,7 @@ class SubprocessEnv:
             self._procs.append(p)
             self._bounds.append((lo, hi))
         self._closed = False
+        self._pending = None
 
     def reset(self) -> dict[str, np.ndarray]:
         for c in self._conns:

@@ -10,8 +10,14 @@ EnvPool's C++ machinery is re-thought for a synchronous dataflow machine:
                              machine, waiting IS computing, so "wait for
                              the first M" becomes "compute only the M
                              that would finish first"
-  sync mode (M == N)      -> step every lane; vmapped while_loop pads all
-                             lanes to the batch max cost (paper Fig. 2a)
+  sync mode (M == N)      -> step every lane; the fused multi-substep
+                             pads all lanes to the batch max cost
+                             (paper Fig. 2a)
+
+Execution is batched-native (envs/batch.py): every recv drives ONE fused
+multi-substep call over the selected block — the Pallas ``env_step``
+kernel for envs that provide it, the bitwise-equal masked-loop vmap
+adapter otherwise — never per-lane ``env.step`` loops under vmap.
 
 Three execution modes:
   * ``sync``   — step all N each recv (gym.vector semantics, M = N).
@@ -37,6 +43,7 @@ from jax import lax
 
 from repro.core.specs import EnvSpec, TimeStep
 from repro.envs.base import Environment
+from repro.envs.batch import as_batch_env
 from repro.utils.pytree import pytree_dataclass, tree_gather
 
 # phases
@@ -89,6 +96,7 @@ class DeviceEnvPool:
         batch_size: int | None = None,
         mode: str = "async",
         aging: float = 1.0,
+        batched: bool | None = None,
     ):
         if batch_size is None:
             batch_size = num_envs
@@ -99,6 +107,13 @@ class DeviceEnvPool:
         if mode == "sync" and batch_size != num_envs:
             raise ValueError("sync mode requires batch_size == num_envs")
         self.env = env
+        # THE hot-path engine: a batched-native view of the env.  All
+        # recv/tick bodies drive batched primitives (one fused
+        # multi-substep call per batch) — never per-lane ``env.step``
+        # under vmap.  ``batched=False`` forces the generic vmap-lifting
+        # adapter (the A/B baseline); None lets the env pick its native
+        # implementation (e.g. the Pallas kernel for MujocoLike).
+        self.benv = as_batch_env(env, native=batched)
         self.spec = env.spec
         self.num_envs = int(num_envs)
         self.batch_size = int(batch_size)
@@ -122,7 +137,7 @@ class DeviceEnvPool:
         assignment — and hence every env's trajectory — is independent of
         how the pool is sharded across devices.
         """
-        env_states = jax.vmap(self.env.init_state)(env_keys)
+        env_states = self.benv.v_init_state(env_keys)
         N = self.num_envs
         act = self.spec.act_spec
         return PoolState(
@@ -151,7 +166,7 @@ class DeviceEnvPool:
         """Store actions for ``env_ids``; returns immediately (paper §3.1)."""
         env_ids = env_ids.astype(jnp.int32)
         sel_states = tree_gather(ps.env_states, env_ids)
-        costs = jax.vmap(self.env.step_cost)(sel_states, actions)
+        costs = self.benv.v_step_cost(sel_states, actions)
         costs = jnp.clip(costs, self.spec.min_cost, self.spec.max_cost)
         return ps.replace(
             actions=ps.actions.at[env_ids].set(actions.astype(ps.actions.dtype)),
@@ -193,11 +208,28 @@ class DeviceEnvPool:
         sel_phase = ps.phase[idx]
         need_step = sel_phase == HAS_ACTION
 
-        new_states, ts = self.env.v_step(sel_states, sel_actions, need_step)
+        # batched-native step: ONE fused multi-substep call for the
+        # whole block (per-lane data-dependent cost handled inside)
+        new_states, ts = self.benv.v_step(sel_states, sel_actions, need_step)
 
-        # merge with stored results for lanes that were READY
+        # merge with stored results for lanes that were READY.  Their obs
+        # is re-derived from the CURRENT env state — ``v_step`` froze the
+        # state for ``do=False`` lanes but its TimeStep obs went through
+        # the (discarded) finalize pass, which is one phantom step ahead
+        # for t-dependent observations.
+        obs = jax.tree.map(
+            lambda stepped, cur: jnp.where(
+                need_step.reshape(
+                    need_step.shape + (1,) * (stepped.ndim - need_step.ndim)
+                ),
+                stepped,
+                cur,
+            ),
+            ts.obs,
+            self.benv.v_observe(sel_states),
+        )
         out = TimeStep(
-            obs=jax.tree.map(lambda x: x, ts.obs),
+            obs=obs,
             reward=jnp.where(need_step, ts.reward, ps.r_reward[idx]),
             done=jnp.where(need_step, ts.done, ps.r_done[idx]),
             terminated=jnp.where(need_step, ts.terminated, ps.r_term[idx]),
@@ -236,7 +268,7 @@ class DeviceEnvPool:
         busy = ps.phase == HAS_ACTION
         starting = busy & (ps.progress == 0)
         # clear accumulators at the start of a step
-        pre = jax.vmap(self.env.pre_step)(ps.env_states)
+        pre = self.benv.v_pre_step(ps.env_states)
         states = jax.tree.map(
             lambda p, s: jnp.where(
                 starting.reshape(starting.shape + (1,) * (p.ndim - 1)), p, s
@@ -244,7 +276,7 @@ class DeviceEnvPool:
             pre,
             ps.env_states,
         )
-        stepped = self.env.v_substep(states, ps.actions)
+        stepped = self.benv.v_substep(states, ps.actions)
         running = busy & (ps.progress < ps.cost)
         states = jax.tree.map(
             lambda n, o: jnp.where(
@@ -256,7 +288,7 @@ class DeviceEnvPool:
         progress = jnp.where(running, ps.progress + 1, ps.progress)
         finished = busy & (progress >= ps.cost)
 
-        fin_states, fin_ts = self.env.v_finalize(states, ps.cost)
+        fin_states, fin_ts = self.benv.v_finalize(states, ps.cost)
         states = jax.tree.map(
             lambda f, s: jnp.where(
                 finished.reshape(finished.shape + (1,) * (f.ndim - 1)), f, s
@@ -293,7 +325,7 @@ class DeviceEnvPool:
         idx = idx.astype(jnp.int32)
         sel_states = tree_gather(ps.env_states, idx)
         out = TimeStep(
-            obs=jax.vmap(self.env.observe)(sel_states),
+            obs=self.benv.v_observe(sel_states),
             reward=ps.r_reward[idx],
             done=ps.r_done[idx],
             terminated=ps.r_term[idx],
@@ -324,10 +356,13 @@ class DeviceEnvPool:
     # ------------------------------------------------------------------ #
     # paper Appendix E: jittable handle API
     # ------------------------------------------------------------------ #
-    def xla(self):
+    def xla(self, seed: int = 0, key: jax.Array | None = None):
         """Returns ``(handle, recv, send, step)`` — all jitted pure fns,
-        mirroring EnvPool's ``env.xla()`` (paper Appendix E)."""
-        handle = self.init(jax.random.PRNGKey(0))
+        mirroring EnvPool's ``env.xla()`` (paper Appendix E).  The
+        handle's init key is ``key`` if given, else ``PRNGKey(seed)``
+        (Appendix E seeds the handle; default matches the old
+        hardcoded ``PRNGKey(0)``)."""
+        handle = self.init(jax.random.PRNGKey(seed) if key is None else key)
         recv = jax.jit(self.recv)
         send = jax.jit(self.send)
         step = jax.jit(self.step)
@@ -339,9 +374,10 @@ def make_pool(
     num_envs: int,
     batch_size: int | None = None,
     mode: str | None = None,
+    batched: bool | None = None,
 ) -> DeviceEnvPool:
     """EnvPool constructor with the paper's mode convention: sync iff
     batch_size in (None, num_envs)."""
     if mode is None:
         mode = "sync" if batch_size in (None, num_envs) else "async"
-    return DeviceEnvPool(env, num_envs, batch_size, mode=mode)
+    return DeviceEnvPool(env, num_envs, batch_size, mode=mode, batched=batched)

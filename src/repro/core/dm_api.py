@@ -1,9 +1,24 @@
-"""DeepMind dm_env-style API (paper Appendix A.2).
+"""DeepMind dm_env-style API (paper Appendix A.2) — engine-agnostic.
 
-    env = repro.make("Pong-v5", num_envs=100)
+    env = repro.make("Pong-v5", num_envs=100)           # any engine
     dm = DmEnv(env)
     ts = dm.reset(key)                 # ts.observation.obs, .observation.env_id
     ts = dm.step(actions, env_id)      # .reward, .discount, .step_type
+
+Works over every ``EnvPool`` engine via ``core.protocol.bind`` — the
+device family keeps its jitted pure-state path, host engines loop in
+numpy; the facade is identical.
+
+Step-type semantics under EnvPool auto-reset: the transition where
+``done`` is reported is LAST (its reward/discount close the finished
+episode, while its observation — per EnvPool auto-reset — is already
+the next episode's first).  The *next* transition served for that env
+is the new episode's FIRST: its ``step_type`` is 0 and its
+``discount`` is 1.  (Its reward — earned by the first action of the
+new episode — is preserved; this engine never burns a step on reset,
+unlike EnvPool's gym-style reset step.)  ``DmEnv`` tracks per-env
+done flags across batches (async recv order included) to emit the
+FIRST markers.
 """
 
 from __future__ import annotations
@@ -13,7 +28,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.device_pool import DeviceEnvPool
+from repro.core.protocol import EnvPool, bind
 
 
 class DmObservation(NamedTuple):
@@ -34,27 +49,35 @@ class DmTimeStep(NamedTuple):
         return self.step_type == 2
 
 
-def _convert(ts, gamma: float = 1.0) -> DmTimeStep:
-    step_type = jnp.where(
-        ts.done, 2, jnp.where(ts.episode_length == 0, 1, 1)
-    ).astype(jnp.int32)
-    # EnvPool autoreset: the obs after done is the next episode's FIRST
-    discount = jnp.where(ts.terminated, 0.0, gamma).astype(jnp.float32)
+def _convert(ts, first: jnp.ndarray, gamma: float = 1.0) -> DmTimeStep:
+    """``first`` marks envs whose previous served transition was LAST —
+    their current obs opens a new episode (EnvPool auto-reset)."""
+    done = jnp.asarray(ts.done)
+    first = jnp.asarray(first)
+    step_type = jnp.where(done, 2, jnp.where(first, 0, 1)).astype(jnp.int32)
+    discount = jnp.where(
+        jnp.asarray(ts.terminated), 0.0, gamma
+    ).astype(jnp.float32)
+    # a FIRST transition belongs to the fresh episode: full discount
+    discount = jnp.where(step_type == 0, 1.0, discount)
     return DmTimeStep(
         step_type=step_type,
-        reward=ts.reward,
+        reward=jnp.asarray(ts.reward),
         discount=discount,
-        observation=DmObservation(obs=ts.obs, env_id=ts.env_id),
+        observation=DmObservation(
+            obs=jnp.asarray(ts.obs), env_id=jnp.asarray(ts.env_id)
+        ),
     )
 
 
 class DmEnv:
-    """dm_env facade over a DeviceEnvPool (sync or async)."""
+    """dm_env facade over ANY EnvPool engine (sync or async)."""
 
-    def __init__(self, pool: DeviceEnvPool, gamma: float = 1.0):
+    def __init__(self, pool: EnvPool, gamma: float = 1.0):
         self.pool = pool
         self.gamma = gamma
-        self._ps = None
+        self._bound = None
+        self._prev_done = None   # (num_envs,) bool: last served ts was LAST
 
     def action_spec(self):
         return self.pool.spec.act_spec
@@ -62,11 +85,23 @@ class DmEnv:
     def observation_spec(self):
         return self.pool.spec.obs_spec
 
-    def reset(self, key: jax.Array) -> DmTimeStep:
-        self._ps, ts = self.pool.reset(key)
-        out = _convert(ts, self.gamma)
-        return out._replace(step_type=jnp.zeros_like(out.step_type))
+    def reset(self, key: jax.Array | None = None) -> DmTimeStep:
+        self._bound = bind(self.pool, key=key)
+        ts = self._bound.reset()
+        self._prev_done = jnp.zeros((self.pool.num_envs,), jnp.bool_)
+        out = _convert(ts, first=jnp.ones_like(jnp.asarray(ts.done)),
+                       gamma=self.gamma)
+        # reset batches are FIRST by definition: no reward yet
+        return out._replace(
+            step_type=jnp.zeros_like(out.step_type),
+            reward=jnp.zeros_like(out.reward),
+        )
 
     def step(self, actions, env_id) -> DmTimeStep:
-        self._ps, ts = self.pool.step(self._ps, actions, env_id)
-        return _convert(ts, self.gamma)
+        if self._bound is None:
+            raise RuntimeError("call DmEnv.reset() before step()")
+        ts = self._bound.step(actions, env_id)
+        ids = jnp.asarray(ts.env_id)
+        first = self._prev_done[ids]
+        self._prev_done = self._prev_done.at[ids].set(jnp.asarray(ts.done))
+        return _convert(ts, first=first, gamma=self.gamma)

@@ -130,6 +130,7 @@ class ThreadEnvPool:
         self._actions = ActionBufferQueue(self.num_envs)
         self._states = StateBufferQueue(fields, self.batch_size, self.num_envs)
         self._running = True
+        self._close_lock = threading.Lock()
         self._threads = [
             threading.Thread(target=self._worker, daemon=True, name=f"envpool-{i}")
             for i in range(self.num_threads)
@@ -187,15 +188,30 @@ class ThreadEnvPool:
         return self.recv()
 
     def reset(self) -> dict[str, np.ndarray]:
-        """Synchronous-style reset: only valid when batch_size == num_envs
-        or when immediately followed by the async recv/send loop."""
+        """Synchronous reset: every env resets and ONE full batch comes
+        back.  Only well-defined when ``batch_size == num_envs`` — with
+        a smaller batch the first recv would silently hold just the
+        first ``batch_size`` finishers while the rest stay queued, so
+        that case raises: async pools must use ``async_reset()`` + the
+        send/recv loop (paper A.3)."""
+        if self.batch_size < self.num_envs:
+            raise RuntimeError(
+                f"reset() on an async ThreadEnvPool (batch_size="
+                f"{self.batch_size} < num_envs={self.num_envs}) would "
+                "return a partial batch; use async_reset() and recv()"
+            )
         self.async_reset()
         return self.recv()
 
     def close(self) -> None:
-        if not self._running:
-            return
-        self._running = False
+        """Idempotent and safe under concurrent calls (e.g. an explicit
+        ``close()`` racing ``__del__`` at interpreter shutdown): exactly
+        one caller wins the flag flip under the lock and performs the
+        shutdown; everyone else returns immediately."""
+        with self._close_lock:
+            if not self._running:
+                return
+            self._running = False
         self._actions.put_batch([_STOP] * self.num_threads)
         for t in self._threads:
             t.join(timeout=5.0)

@@ -1,0 +1,163 @@
+"""The ``EnvPool`` protocol — ONE spec-driven front-end for all engines.
+
+Every engine (`device`, `device-masked`, `device-sharded`, `thread`,
+`forloop`, `subprocess`) satisfies the same structural contract: specs
+(``spec``/``num_envs``/``batch_size``) plus the paper's §3.1 API
+(``send``/``recv``/``step``/sync ``reset``).  Drivers — the dm_env
+facade, the XLA collect loop, PPO — program against this protocol, so
+the engine is an execution detail, not an API fork.
+
+Two calling conventions exist underneath:
+
+* **functional** engines (device family): pure functions over an
+  explicit ``PoolState`` — ``send(ps, actions, ids) -> ps``,
+  ``recv(ps) -> (ps, TimeStep)``, ``reset(key) -> (ps, TimeStep)`` —
+  jittable, scannable, shardable (paper Appendix E).
+* **host** engines (thread / forloop / subprocess): stateful objects —
+  ``send(actions, ids)``, ``recv() -> dict``, ``reset() -> dict``.
+
+``bind(pool)`` erases the difference: it returns a uniform stateful
+handle (``reset()/step()/send()/recv()`` all yielding ``TimeStep``
+batches) that every driver can loop over, while ``is_functional``
+lets jit-native drivers keep the pure path when it exists.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.specs import EnvSpec, TimeStep
+
+
+@runtime_checkable
+class EnvPool(Protocol):
+    """Structural contract every engine satisfies (paper §3.1/§3.4)."""
+
+    spec: EnvSpec
+    num_envs: int
+    batch_size: int
+
+    def send(self, *args: Any, **kwargs: Any) -> Any: ...
+
+    def recv(self, *args: Any, **kwargs: Any) -> Any: ...
+
+    def step(self, *args: Any, **kwargs: Any) -> Any: ...
+
+    def reset(self, *args: Any, **kwargs: Any) -> Any: ...
+
+
+@runtime_checkable
+class FunctionalEnvPool(EnvPool, Protocol):
+    """Pure-state engines: additionally expose ``init`` (key ->
+    PoolState) and the jitted ``xla()`` handle API (paper Appendix E)."""
+
+    def init(self, key: Any) -> Any: ...
+
+    def xla(self, *args: Any, **kwargs: Any) -> Any: ...
+
+
+def is_functional(pool: Any) -> bool:
+    """True for the device-family engines (pure state, jittable)."""
+    return isinstance(pool, FunctionalEnvPool)
+
+
+def to_timestep(out: "dict[str, np.ndarray] | TimeStep") -> TimeStep:
+    """Normalize a host-engine recv dict to the TimeStep container."""
+    if isinstance(out, TimeStep):
+        return out
+    return TimeStep(
+        obs=out["obs"],
+        reward=out["reward"],
+        done=out["done"],
+        terminated=out["terminated"],
+        truncated=out["truncated"],
+        env_id=out["env_id"],
+        episode_return=out["episode_return"],
+        episode_length=out["episode_length"],
+        step_cost=out["step_cost"],
+    )
+
+
+class BoundEnvPool:
+    """Uniform stateful handle over any ``EnvPool`` engine.
+
+    Owns the rollout state (the ``PoolState`` for functional engines,
+    nothing for host engines) so drivers see one interface:
+
+        h = bind(pool, key)
+        ts = h.reset()
+        ts = h.step(actions, ts.env_id)   # or h.send(...) / h.recv()
+
+    Functional engines get jitted send/recv/step; host engines pass
+    numpy through unchanged.  ``ts`` is always a ``TimeStep``.
+    """
+
+    def __init__(self, pool: EnvPool, key: Any = None, seed: int = 0):
+        import jax
+
+        self.pool = pool
+        self.spec = pool.spec
+        self.num_envs = pool.num_envs
+        self.batch_size = pool.batch_size
+        self.functional = is_functional(pool)
+        self._ps = None
+        if self.functional:
+            self._key = key if key is not None else jax.random.PRNGKey(seed)
+            self._jit_step = jax.jit(pool.step)
+            self._jit_send = jax.jit(pool.send)
+            self._jit_recv = jax.jit(pool.recv)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def state(self):
+        """The functional engine's PoolState (None for host engines)."""
+        return self._ps
+
+    def reset(self) -> TimeStep:
+        if self.functional:
+            self._ps, ts = self.pool.reset(self._key)
+            return ts
+        pool = self.pool
+        if hasattr(pool, "async_reset") and pool.batch_size < pool.num_envs:
+            pool.async_reset()
+            return to_timestep(pool.recv())
+        return to_timestep(pool.reset())
+
+    def send(self, actions: Any, env_ids: Any) -> None:
+        if self.functional:
+            self._ps = self._jit_send(self._ps, actions, env_ids)
+        else:
+            self.pool.send(np.asarray(actions), np.asarray(env_ids))
+
+    def recv(self) -> TimeStep:
+        if self.functional:
+            self._ps, ts = self._jit_recv(self._ps)
+            return ts
+        return to_timestep(self.pool.recv())
+
+    def step(self, actions: Any, env_ids: Any) -> TimeStep:
+        if self.functional:
+            self._ps, ts = self._jit_step(self._ps, actions, env_ids)
+            return ts
+        return to_timestep(self.pool.step(np.asarray(actions), np.asarray(env_ids)))
+
+    def close(self) -> None:
+        if hasattr(self.pool, "close"):
+            self.pool.close()
+
+
+def bind(pool: EnvPool, key: Any = None, seed: int = 0) -> BoundEnvPool:
+    """Uniform stateful view of any engine (see ``BoundEnvPool``)."""
+    return BoundEnvPool(pool, key=key, seed=seed)
+
+
+__all__ = [
+    "BoundEnvPool",
+    "EnvPool",
+    "FunctionalEnvPool",
+    "bind",
+    "is_functional",
+    "to_timestep",
+]

@@ -87,15 +87,24 @@ def make(
     num_shards: int | None = None,
     mesh: Any = None,
     seed: int = 0,
+    batched: bool | None = None,
     **env_kwargs: Any,
 ):
-    """Create a vectorized env pool, EnvPool-style."""
+    """Create a vectorized env pool, EnvPool-style.
+
+    Every returned engine satisfies ``core.protocol.EnvPool``.  For the
+    device family, ``batched`` selects the batched-env implementation:
+    None (default) lets the env pick its native one (e.g. the Pallas
+    ``env_step`` kernel for MujocoLike), False forces the generic
+    vmap-lifting adapter (the A/B baseline).
+    """
     if engine in ("device", "device-masked"):
         env = _jax_env(task_id, **env_kwargs)
         mode = None if engine == "device" else "masked"
         if mode is None:
             mode = "sync" if batch_size in (None, num_envs) else "async"
-        return DeviceEnvPool(env, num_envs, batch_size, mode=mode)
+        return DeviceEnvPool(env, num_envs, batch_size, mode=mode,
+                             batched=batched)
 
     if engine == "device-sharded":
         from repro.core.sharded_pool import ShardedDeviceEnvPool
@@ -104,6 +113,7 @@ def make(
         return ShardedDeviceEnvPool(
             env, num_envs, batch_size,
             mesh=mesh if mesh is not None else num_shards,
+            batched=batched,
         )
 
     if engine == "thread":

@@ -81,6 +81,7 @@ class ShardedDeviceEnvPool:
         mesh: Mesh | int | None = None,
         axis_name: str = ENV_AXIS,
         aging: float = 1.0,
+        batched: bool | None = None,
     ):
         if batch_size is None:
             batch_size = num_envs
@@ -105,8 +106,12 @@ class ShardedDeviceEnvPool:
         self.mesh = mesh
         self.axis_name = axis_name
         self.num_shards = d
+        # per-shard bodies drive the SAME batched-native primitives as
+        # the single-device engine (one fused multi-substep per shard
+        # per recv) — sharding is a pure layout transform on top
         self.inner = DeviceEnvPool(
-            env, num_envs // d, batch_size // d, mode=mode, aging=aging
+            env, num_envs // d, batch_size // d, mode=mode, aging=aging,
+            batched=batched,
         )
 
     # ------------------------------------------------------------------ #
@@ -197,9 +202,11 @@ class ShardedDeviceEnvPool:
     def reset(self, key: jax.Array) -> tuple[PoolState, TimeStep]:
         return self._jit_reset(key)
 
-    def xla(self):
-        """``(handle, recv, send, step)`` jitted pure fns (paper App. E)."""
-        handle = self.init(jax.random.PRNGKey(0))
+    def xla(self, seed: int = 0, key: jax.Array | None = None):
+        """``(handle, recv, send, step)`` jitted pure fns (paper App. E).
+        ``seed``/``key`` select the handle's init key (default matches
+        the old hardcoded ``PRNGKey(0)``)."""
+        handle = self.init(jax.random.PRNGKey(seed) if key is None else key)
         return handle, jax.jit(self.recv), jax.jit(self.send), jax.jit(self.step)
 
     # ------------------------------------------------------------------ #

@@ -1,14 +1,18 @@
-"""XLA-jitted actor loop (paper Appendix E).
+"""Rollout collection over the ``EnvPool`` protocol (paper Appendix E).
 
 The paper exposes ``handle, recv, send, step = env.xla()`` so the whole
-collect loop lowers into XLA and runs free of the Python GIL.  Here the
-pool already lives on-device, so the actor loop is a single ``lax.scan``
-— the logical conclusion of Appendix E: *zero* host round-trips.
+collect loop lowers into XLA and runs free of the Python GIL.  For the
+device-family engines the pool already lives on-device, so the actor
+loop is a single ``lax.scan`` — the logical conclusion of Appendix E:
+*zero* host round-trips.  ``ShardedDeviceEnvPool`` keeps the state and
+the batch device-resident per shard, so the scan stays gather-free
+across devices.
 
-Works with any device engine: ``DeviceEnvPool`` (one device) or
-``ShardedDeviceEnvPool`` (shard_map over a mesh) — the sharded pool's
-``step`` keeps the state and the batch device-resident per shard, so the
-whole scan stays gather-free across devices.
+``build_collect_fn`` is engine-agnostic: functional engines get the
+jitted ``lax.scan`` body; host engines (thread / forloop / subprocess)
+get a numpy driver with the SAME signature and the same stacked
+``(num_steps, batch, ...)`` trajectory layout, so benchmarks and
+training code run unchanged across all six engines.
 """
 
 from __future__ import annotations
@@ -17,55 +21,90 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core.device_pool import DeviceEnvPool, PoolState
+from repro.core.protocol import EnvPool, is_functional, to_timestep
 from repro.core.specs import TimeStep
+from repro.utils.pytree import tree_stack
 
-# any object with spec/batch_size/step/reset (DeviceEnvPool or
-# ShardedDeviceEnvPool — kept structural to avoid an import cycle)
+# any object satisfying core.protocol.EnvPool (kept loose for typing)
 DevicePool = Any
 
 
+def collect_init(pool: EnvPool, key: jax.Array):
+    """Engine-agnostic reset: ``(carry, first TimeStep)``.  ``carry`` is
+    the PoolState for functional engines, None for host engines."""
+    if is_functional(pool):
+        return pool.reset(key)
+    if hasattr(pool, "async_reset") and pool.batch_size < pool.num_envs:
+        pool.async_reset()
+        return None, to_timestep(pool.recv())
+    return None, to_timestep(pool.reset())
+
+
 def build_collect_fn(
-    pool: DevicePool,
+    pool: EnvPool,
     policy_fn: Callable[[Any, Any, jax.Array], Any],
     num_steps: int,
     donate: bool = True,
 ):
-    """Returns jitted ``collect(ps, policy_params, last_ts, key) ->
-    (ps, last_ts, trajectory)`` where trajectory stacks ``num_steps``
-    TimeStep batches of size ``batch_size`` plus the actions taken.
+    """Returns ``collect(ps, policy_params, last_ts, key) ->
+    (ps, last_ts, trajectory, actions)`` where trajectory stacks
+    ``num_steps`` TimeStep batches of size ``batch_size``.
 
-    ``policy_fn(params, obs, key) -> actions`` must be jit-traceable.
+    Functional engines: one jitted ``lax.scan`` (``ps`` is the
+    PoolState).  Host engines: a numpy loop with the same signature
+    (``ps`` is ignored and returned as None).
+
+    ``policy_fn(params, obs, key) -> actions`` must be jit-traceable
+    for the functional path.
     """
+    if is_functional(pool):
+        def one_step(carry, key):
+            ps, ts, params = carry
+            actions = policy_fn(params, ts.obs, key)
+            ps, new_ts = pool.step(ps, actions, ts.env_id)
+            return (ps, new_ts, params), (ts, actions)
 
-    def one_step(carry, key):
-        ps, ts, params = carry
-        actions = policy_fn(params, ts.obs, key)
-        ps, new_ts = pool.step(ps, actions, ts.env_id)
-        return (ps, new_ts, params), (ts, actions)
+        def collect(ps: PoolState, params: Any, last_ts: TimeStep,
+                    key: jax.Array):
+            keys = jax.random.split(key, num_steps)
+            (ps, last_ts, _), (traj, acts) = lax.scan(
+                one_step, (ps, last_ts, params), keys
+            )
+            return ps, last_ts, traj, acts
 
-    def collect(ps: PoolState, params: Any, last_ts: TimeStep, key: jax.Array):
-        keys = jax.random.split(key, num_steps)
-        (ps, last_ts, _), (traj, acts) = lax.scan(
-            one_step, (ps, last_ts, params), keys
-        )
-        return ps, last_ts, traj, acts
+        kwargs = {"donate_argnums": (0,)} if donate else {}
+        return jax.jit(collect, **kwargs)
 
-    kwargs = {"donate_argnums": (0,)} if donate else {}
-    return jax.jit(collect, **kwargs)
+    def collect_host(ps: Any, params: Any, last_ts: TimeStep, key: jax.Array):
+        ts = to_timestep(last_ts)
+        steps, acts = [], []
+        for k in jax.random.split(key, num_steps):
+            actions = policy_fn(params, jnp.asarray(ts.obs), k)
+            steps.append(ts)
+            acts.append(jnp.asarray(actions))
+            out = pool.step(np.asarray(actions), np.asarray(ts.env_id))
+            ts = to_timestep(out)
+        traj = tree_stack([
+            jax.tree.map(jnp.asarray, s) for s in steps
+        ])
+        return None, ts, traj, jnp.stack(acts)
+
+    return collect_host
 
 
 def build_random_collect_fn(pool: DevicePool, num_steps: int):
     """Random-action collect loop — the paper's pure-simulation benchmark
     (§4.1: "randomly sampled actions as inputs")."""
 
-    env = pool.env
+    spec = pool.spec
 
     def policy(params, obs, key):
         del params, obs
-        return env.sample_actions(key, pool.batch_size)
+        return spec.act_spec.sample_jax(key, (pool.batch_size,))
 
     return build_collect_fn(pool, policy, num_steps)
 

@@ -1,15 +1,20 @@
 from repro.envs.atari_like import AtariLike
 from repro.envs.base import Environment
+from repro.envs.batch import BatchEnvironment, VmapBatchEnv, as_batch_env
 from repro.envs.classic import CartPole, MountainCar, Pendulum
-from repro.envs.mujoco_like import MujocoLike
+from repro.envs.mujoco_like import MujocoLike, MujocoLikeBatch
 from repro.envs.token_env import TokenEnv
 
 __all__ = [
     "AtariLike",
+    "BatchEnvironment",
     "CartPole",
     "Environment",
     "MountainCar",
     "MujocoLike",
+    "MujocoLikeBatch",
     "Pendulum",
     "TokenEnv",
+    "VmapBatchEnv",
+    "as_batch_env",
 ]

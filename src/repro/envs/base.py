@@ -144,6 +144,22 @@ class Environment:
         )
         return state, ts
 
+    # ------------------------------------------------------------------ #
+    # batched-native view (envs/batch.py)
+    # ------------------------------------------------------------------ #
+    def as_batch(self):
+        """Batched-native view of this env (``BatchEnvironment``).
+
+        Default: the generic vmap-lifting adapter.  Envs with a
+        natively batched SoA implementation (e.g. ``MujocoLike`` via the
+        Pallas ``env_step`` kernel) override this; engines call it once
+        at construction and drive only batched primitives on the hot
+        path.
+        """
+        from repro.envs.batch import VmapBatchEnv
+
+        return VmapBatchEnv(self)
+
     # vmapped helpers (built lazily, cached)
     def v_init(self, keys: jax.Array):
         return jax.vmap(self.init)(keys)

@@ -1,0 +1,191 @@
+"""Batched-native environment layer.
+
+The paper's throughput (and CuLE's GPU lesson) comes from making env
+*batches* the unit of execution: per-env stepping leaves the hardware
+idle, batched-native emulation saturates it.  ``BatchEnvironment`` is
+that unit — every method takes and returns structure-of-arrays pytrees
+with a leading ``N`` dim, and the fused ``v_step`` advances a whole
+batch (data-dependent per-lane substep counts included) in one pass.
+
+Two implementations:
+
+* ``VmapBatchEnv`` — the default adapter: lifts any per-lane
+  ``Environment`` by ``jax.vmap``-ing its primitives.  Its fused
+  multi-substep is a single masked ``while_loop`` over the batch —
+  the same select semantics JAX derives for a vmapped per-lane
+  ``while_loop``, so the trajectories are bitwise-identical to
+  ``jax.vmap(env.step)`` while keeping the loop carry to exactly one
+  state block.
+* natively batched envs (e.g. ``MujocoLikeBatch``) override the
+  substep primitives with kernel-backed SoA implementations (the
+  Pallas ``kernels/env_step`` kernel on TPU, its jnp reference on CPU)
+  and inherit everything else.
+
+Engines hold a ``BatchEnvironment`` (``as_batch_env``) and drive ONLY
+batched primitives on the hot path; the per-lane ``Environment`` class
+remains the authoring interface.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.specs import EnvSpec, TimeStep
+from repro.envs.base import Environment
+
+
+def _mask_tree(mask: jnp.ndarray, new: Any, old: Any) -> Any:
+    """Per-leaf select with a leading-axis lane mask."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(
+            mask.reshape(mask.shape + (1,) * (n.ndim - mask.ndim)), n, o
+        ),
+        new,
+        old,
+    )
+
+
+class BatchEnvironment:
+    """Natively batched env interface: leading dim N on every method.
+
+    Subclasses implement the primitive ``v_*`` methods; ``v_step`` (the
+    engine hot path) and ``v_multi_substep`` have default fused
+    implementations in terms of the primitives.
+    """
+
+    spec: EnvSpec
+
+    # ------------------------------------------------------------------ #
+    # batched primitives
+    # ------------------------------------------------------------------ #
+    def v_init_state(self, keys: jax.Array) -> Any:
+        raise NotImplementedError
+
+    def v_substep(self, states: Any, actions: Any) -> Any:
+        raise NotImplementedError
+
+    def v_step_cost(self, states: Any, actions: Any) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def v_pre_step(self, states: Any) -> Any:
+        raise NotImplementedError
+
+    def v_observe(self, states: Any) -> Any:
+        raise NotImplementedError
+
+    def v_finalize(self, states: Any, costs: jnp.ndarray
+                   ) -> tuple[Any, TimeStep]:
+        raise NotImplementedError
+
+    def sample_actions(self, key: jax.Array, batch: int):
+        return self.spec.act_spec.sample_jax(key, (batch,))
+
+    # ------------------------------------------------------------------ #
+    # fused derived API (the engine hot path)
+    # ------------------------------------------------------------------ #
+    def v_init(self, keys: jax.Array) -> tuple[Any, Any]:
+        states = self.v_init_state(keys)
+        return states, self.v_observe(states)
+
+    def v_multi_substep(self, states: Any, actions: Any, costs: jnp.ndarray
+                        ) -> Any:
+        """Advance lane ``n`` by ``costs[n]`` substeps in ONE masked loop
+        over the whole batch (no per-lane loop carries).  Bitwise equal
+        to a vmapped per-lane ``while_loop``: each iteration applies the
+        substep everywhere and freezes lanes past their cost with
+        selects — exactly the batching rule JAX uses for ``while_loop``
+        under ``vmap``."""
+        costs = costs.astype(jnp.int32)
+        trip = jnp.max(costs)
+
+        def cond(carry):
+            return carry[0] < trip
+
+        def body(carry):
+            i, s = carry
+            stepped = self.v_substep(s, actions)
+            s = _mask_tree(i < costs, stepped, s)
+            return i + 1, s
+
+        _, states = lax.while_loop(cond, body, (jnp.int32(0), states))
+        return states
+
+    def v_step(self, states: Any, actions: Any, do: Any = None
+               ) -> tuple[Any, TimeStep]:
+        """One full batched env step: per-lane cost, fused substeps,
+        episode bookkeeping, auto-reset — one multi-substep call per
+        batch instead of N per-lane loops.  ``do=False`` lanes are
+        frozen (zero substeps, state restored), as in
+        ``Environment.step``."""
+        spec = self.spec
+        orig = states
+        costs = jnp.clip(
+            self.v_step_cost(states, actions), spec.min_cost, spec.max_cost
+        ).astype(jnp.int32)
+        if do is None:
+            do = jnp.ones_like(costs, jnp.bool_)
+        do = jnp.asarray(do, jnp.bool_)
+        costs = jnp.where(do, costs, 0)
+        states = self.v_pre_step(states)
+        states = self.v_multi_substep(states, actions, costs)
+        states, ts = self.v_finalize(states, costs)
+        states = _mask_tree(do, states, orig)
+        return states, ts
+
+
+class VmapBatchEnv(BatchEnvironment):
+    """Default adapter: any per-lane ``Environment``, vmap-lifted."""
+
+    def __init__(self, env: Environment):
+        self.env = env
+        self.spec = env.spec
+        self._v_init_state = jax.vmap(env.init_state)
+        self._v_substep = jax.vmap(env.substep)
+        self._v_step_cost = jax.vmap(env.step_cost)
+        self._v_pre_step = jax.vmap(env.pre_step)
+        self._v_observe = jax.vmap(env.observe)
+        self._v_finalize = jax.vmap(env.finalize_step)
+
+    def v_init_state(self, keys):
+        return self._v_init_state(keys)
+
+    def v_substep(self, states, actions):
+        return self._v_substep(states, actions)
+
+    def v_step_cost(self, states, actions):
+        return self._v_step_cost(states, actions)
+
+    def v_pre_step(self, states):
+        return self._v_pre_step(states)
+
+    def v_observe(self, states):
+        return self._v_observe(states)
+
+    def v_finalize(self, states, costs):
+        return self._v_finalize(states, costs)
+
+
+def as_batch_env(env: Environment | BatchEnvironment,
+                 native: bool | None = None) -> BatchEnvironment:
+    """Batched view of ``env``.
+
+    ``native=None`` (default) lets the env pick its best batched
+    implementation (``Environment.as_batch``, e.g. the Pallas-backed
+    ``MujocoLikeBatch``); ``native=False`` forces the generic vmap
+    adapter (the A/B baseline); ``native=True`` requires a non-generic
+    implementation and raises if the env has none.
+    """
+    if isinstance(env, BatchEnvironment):
+        return env
+    if native is False:
+        return VmapBatchEnv(env)
+    benv = env.as_batch()
+    if native is True and type(benv) is VmapBatchEnv:
+        raise ValueError(
+            f"{type(env).__name__} has no natively batched implementation"
+        )
+    return benv

@@ -22,6 +22,9 @@ import jax.numpy as jnp
 
 from repro.core.specs import ArraySpec, EnvSpec
 from repro.envs.base import Environment
+from repro.envs.batch import VmapBatchEnv
+from repro.kernels.env_step.ops import env_multi_step, resolve_backend
+from repro.kernels.env_step.ref import pack_state, unpack_state
 from repro.utils.pytree import pytree_dataclass
 
 N_JOINTS = 8
@@ -72,16 +75,23 @@ class MujocoLike(Environment):
 
     # -------------------------------------------------------------- #
     def _leg_foot_height(self, s: MujocoLikeState) -> jnp.ndarray:
-        """Height of each of the 4 feet (pairs of joints: hip, knee)."""
-        hip = s.q[0::2]
-        knee = s.q[1::2]
+        """Height of each of the 4 feet (pairs of joints: hip, knee).
+
+        Shape-polymorphic over an optional leading batch dim — the SoA
+        batched view (``MujocoLikeBatch``) calls it directly, so the
+        contact geometry has exactly one definition.
+        """
+        hip = s.q[..., 0::2]
+        knee = s.q[..., 1::2]
         # foot height relative to torso: legs extend down by
         # cos(hip)·l1 + cos(hip+knee)·l2
         drop = 0.2 * jnp.cos(hip) + 0.2 * jnp.cos(hip + knee)
-        return s.pos[2] - drop
+        return s.pos[..., 2:3] - drop
 
     def n_contacts(self, s: MujocoLikeState) -> jnp.ndarray:
-        return jnp.sum(self._leg_foot_height(s) < 0.05).astype(jnp.int32)
+        return jnp.sum(
+            self._leg_foot_height(s) < 0.05, axis=-1
+        ).astype(jnp.int32)
 
     def substep(self, s: MujocoLikeState, action) -> MujocoLikeState:
         a = jnp.clip(action, -1.0, 1.0)
@@ -146,4 +156,103 @@ class MujocoLike(Environment):
                     ]
                 ),                            # 3
             ]
+        ).astype(jnp.float32)
+
+    def as_batch(self) -> "MujocoLikeBatch":
+        """Batched-native view backed by the Pallas env_step kernel
+        (compiled on TPU; jnp reference fallback elsewhere)."""
+        return MujocoLikeBatch(self)
+
+
+class MujocoLikeBatch(VmapBatchEnv):
+    """Natively batched MujocoLike: SoA hot path on the fused substep
+    kernel.
+
+    The per-lane class stays the authoring/oracle surface; this view
+    packs the physics scalars into the kernel's (N, 28) SoA layout and
+    runs all data-dependent substeps of a batch in ONE
+    ``kernels/env_step`` call per agent step — Pallas-compiled on TPU,
+    the bit-identical jnp reference on CPU (``backend="auto"``),
+    ``"pallas-interpret"`` for cross-checking the kernel off-TPU.
+    Bookkeeping (init, pre_step, finalize/auto-reset) stays vmap-lifted:
+    it is not hot and must match the per-lane path bitwise.
+    """
+
+    def __init__(self, env: MujocoLike, backend: str = "auto",
+                 block_n: int = 256):
+        super().__init__(env)
+        self.backend = resolve_backend(backend)
+        self.block_n = int(block_n)
+
+    # -------------------------------------------------------------- #
+    # SoA packing
+    # -------------------------------------------------------------- #
+    @staticmethod
+    def _pack(s: MujocoLikeState) -> jnp.ndarray:
+        return pack_state(s.pos, s.vel, s.rot, s.ang_vel, s.q, s.qd)
+
+    @staticmethod
+    def _unpack_into(s: MujocoLikeState, flat: jnp.ndarray,
+                     reward_acc: jnp.ndarray) -> MujocoLikeState:
+        pos, vel, rot, ang, q, qd = unpack_state(flat)
+        return s.replace(pos=pos, vel=vel, rot=rot, ang_vel=ang, q=q, qd=qd,
+                         reward_acc=reward_acc)
+
+    # -------------------------------------------------------------- #
+    # kernel-backed batched primitives.  With the 'vmap' backend (the
+    # off-TPU auto choice) both fall through to the generic masked-loop
+    # implementation — same jaxpr as the per-lane path, which is what
+    # keeps whole-rollout conformance bitwise on CPU (see
+    # kernels/env_step/ops.default_backend).
+    # -------------------------------------------------------------- #
+    def v_substep(self, states: MujocoLikeState, actions) -> MujocoLikeState:
+        if self.backend == "vmap":
+            return super().v_substep(states, actions)
+        n = states.reward_acc.shape[0]
+        flat, acc = env_multi_step(
+            self._pack(states), actions, jnp.ones((n,), jnp.int32),
+            states.reward_acc, max_cost=1, block_n=self.block_n,
+            backend=self.backend,
+        )
+        return self._unpack_into(states, flat, acc)
+
+    def v_multi_substep(self, states: MujocoLikeState, actions,
+                        costs: jnp.ndarray) -> MujocoLikeState:
+        if self.backend == "vmap":
+            return super().v_multi_substep(states, actions, costs)
+        flat, acc = env_multi_step(
+            self._pack(states), actions, costs, states.reward_acc,
+            max_cost=self.spec.max_cost, block_n=self.block_n,
+            backend=self.backend,
+        )
+        return self._unpack_into(states, flat, acc)
+
+    # -------------------------------------------------------------- #
+    # natively batched observation / cost model (SoA, no vmap) — the
+    # contact geometry comes from the env class's shape-polymorphic
+    # ``_leg_foot_height``/``n_contacts``, so it has ONE definition
+    # -------------------------------------------------------------- #
+    def v_step_cost(self, s: MujocoLikeState, actions) -> jnp.ndarray:
+        return jnp.int32(5) + self.env.n_contacts(s)
+
+    def v_observe(self, s: MujocoLikeState) -> jnp.ndarray:
+        foot_h = self.env._leg_foot_height(s)
+        return jnp.concatenate(
+            [
+                s.pos[..., 2:],
+                s.rot,
+                s.q,
+                s.vel,
+                s.ang_vel,
+                s.qd,
+                jnp.stack(
+                    [
+                        jnp.sum(foot_h < 0.05, axis=-1).astype(jnp.float32),
+                        jnp.min(foot_h, axis=-1),
+                        jnp.max(foot_h, axis=-1),
+                    ],
+                    axis=-1,
+                ),
+            ],
+            axis=-1,
         ).astype(jnp.float32)

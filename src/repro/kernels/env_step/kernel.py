@@ -9,8 +9,18 @@ states never touch HBM: per agent-step traffic is exactly one state tile
 read + one write (the paper's zero-copy StateBufferQueue property, now at
 the register level).
 
+Per-lane cost masking (``cost``): MuJoCo's solver cost is data-dependent
+(contacts add iterations), so a batch of envs needs lane ``n`` to run
+exactly ``cost[n]`` substeps.  The kernel unrolls ``n_sub = max_cost``
+iterations and freezes finished lanes with selects — the same semantics
+JAX gives a vmapped per-lane ``while_loop``, so results are
+bitwise-identical to the per-lane engine path, but with one fused kernel
+launch per agent step instead of a lane-strided loop.
+
 Layout note: state is SoA (N, 28) with the 28 physics scalars in the minor
 (lane) dim; joints are 8-wide which packs two ants per 16-lane VPU subrow.
+The physics op order matches ``MujocoLike.substep`` exactly (the contact
+model reads the PRE-update joint state) — see ref.py for the oracle.
 """
 
 from __future__ import annotations
@@ -21,10 +31,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.env_step.ref import DT
+from repro.kernels.env_step.ref import _substep_core
 
 
 def _env_kernel(state_ref, action_ref, out_ref, reward_ref, *, n_sub: int):
+    """Uniform-cost variant: every lane runs all ``n_sub`` substeps."""
     s = state_ref[...].astype(jnp.float32)        # (block_n, 28)
     a = jnp.clip(action_ref[...].astype(jnp.float32), -1.0, 1.0)
 
@@ -37,33 +48,51 @@ def _env_kernel(state_ref, action_ref, out_ref, reward_ref, *, n_sub: int):
     reward = jnp.zeros((s.shape[0],), jnp.float32)
 
     for _ in range(n_sub):  # unrolled: n_sub is small and static
-        qdd = 18.0 * a - 4.0 * q - 1.2 * qd
-        qd = qd + DT * qdd
-        q = jnp.clip(q + DT * qd, -1.2, 1.2)
-
-        hip, knee = q[:, 0::2], q[:, 1::2]
-        foot_h = pos[:, 2:3] - (0.2 * jnp.cos(hip) + 0.2 * jnp.cos(hip + knee))
-        contact = (foot_h < 0.05).astype(jnp.float32)
-        thrust = jnp.sum(contact * (-qd[:, 0::2]), axis=-1) * 0.08
-        normal = jnp.sum(
-            contact * jnp.maximum(0.05 - foot_h, 0.0), axis=-1
-        ) * 120.0
-
-        acc = jnp.stack(
-            [thrust, jnp.zeros_like(thrust), -9.81 + normal], axis=-1
+        pos, vel, rot, ang, q, qd, fwd, ctrl, alive = _substep_core(
+            pos, vel, rot, ang, q, qd, a
         )
-        vel = (vel + DT * acc) * 0.995
-        pos = pos + DT * vel
-        pos = jnp.concatenate(
-            [pos[:, :2], jnp.maximum(pos[:, 2:3], 0.1)], axis=-1
-        )
+        reward = ((reward + fwd) - ctrl) + alive
 
-        asym = contact[:, 0] + contact[:, 1] - contact[:, 2] - contact[:, 3]
-        ang = (ang + DT * jnp.stack(
-            [0.4 * asym, 0.2 * asym, jnp.zeros_like(asym)], axis=-1
-        )) * 0.98
-        rot = rot + DT * ang
-        reward = reward + vel[:, 0] * DT * 20 - 0.5 * jnp.sum(a * a, axis=-1) * DT + DT
+    out_ref[...] = jnp.concatenate([pos, vel, rot, ang, q, qd], axis=-1).astype(
+        out_ref.dtype
+    )
+    reward_ref[...] = reward.astype(reward_ref.dtype)
+
+
+def _env_kernel_masked(state_ref, action_ref, cost_ref, reward_in_ref,
+                       out_ref, reward_ref, *, n_sub: int):
+    """Per-lane cost variant: lane ``n`` advances ``cost[n] <= n_sub``
+    substeps; finished lanes are frozen by selects (vmapped-while
+    semantics, bitwise).  The reward accumulator is seeded from
+    ``reward_in_ref`` (the env's ``reward_acc``) so the in-kernel
+    accumulation ``((acc + fwd) - ctrl) + alive`` matches the env
+    class's float association exactly."""
+    s = state_ref[...].astype(jnp.float32)        # (block_n, 28)
+    a = jnp.clip(action_ref[...].astype(jnp.float32), -1.0, 1.0)
+    cost = cost_ref[...].astype(jnp.int32)        # (block_n,)
+
+    pos = s[:, 0:3]
+    vel = s[:, 3:6]
+    rot = s[:, 6:9]
+    ang = s[:, 9:12]
+    q = s[:, 12:20]
+    qd = s[:, 20:28]
+    reward = reward_in_ref[...].astype(jnp.float32)
+
+    for i in range(n_sub):  # unrolled: n_sub = spec.max_cost, small/static
+        n_pos, n_vel, n_rot, n_ang, n_q, n_qd, fwd, ctrl, alive = _substep_core(
+            pos, vel, rot, ang, q, qd, a
+        )
+        n_reward = ((reward + fwd) - ctrl) + alive
+        m = i < cost                              # (block_n,) lane mask
+        m2 = m[:, None]
+        pos = jnp.where(m2, n_pos, pos)
+        vel = jnp.where(m2, n_vel, vel)
+        rot = jnp.where(m2, n_rot, rot)
+        ang = jnp.where(m2, n_ang, ang)
+        q = jnp.where(m2, n_q, q)
+        qd = jnp.where(m2, n_qd, qd)
+        reward = jnp.where(m, n_reward, reward)
 
     out_ref[...] = jnp.concatenate([pos, vel, rot, ang, q, qd], axis=-1).astype(
         out_ref.dtype
@@ -74,30 +103,55 @@ def _env_kernel(state_ref, action_ref, out_ref, reward_ref, *, n_sub: int):
 def env_substep_batch(
     state: jnp.ndarray,    # (N, 28)
     action: jnp.ndarray,   # (N, 8)
+    cost: jnp.ndarray | None = None,   # (N,) int32 per-lane substep count
+    reward0: jnp.ndarray | None = None,  # (N,) f32 accumulator seed
     *,
     n_sub: int = 1,
     block_n: int = 256,
     interpret: bool = True,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused batched substeps.  With ``cost=None`` every lane runs
+    ``n_sub`` substeps; with a ``cost`` vector, lane ``n`` runs
+    ``cost[n]`` (callers pass ``n_sub = spec.max_cost``) and the reward
+    output continues accumulating from ``reward0`` (default zeros)."""
     N = state.shape[0]
     block_n = min(block_n, N)
     if N % block_n:
         raise ValueError(f"N={N} % block_n={block_n}")
-    kernel = functools.partial(_env_kernel, n_sub=n_sub)
+    out_specs = [
+        pl.BlockSpec((block_n, 28), lambda i: (i, 0)),
+        pl.BlockSpec((block_n,), lambda i: (i,)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((N, 28), state.dtype),
+        jax.ShapeDtypeStruct((N,), jnp.float32),
+    ]
+    if cost is None:
+        kernel = functools.partial(_env_kernel, n_sub=n_sub)
+        return pl.pallas_call(
+            kernel,
+            grid=(N // block_n,),
+            in_specs=[
+                pl.BlockSpec((block_n, 28), lambda i: (i, 0)),
+                pl.BlockSpec((block_n, 8), lambda i: (i, 0)),
+            ],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(state, action)
+    if reward0 is None:
+        reward0 = jnp.zeros((N,), jnp.float32)
+    kernel = functools.partial(_env_kernel_masked, n_sub=n_sub)
     return pl.pallas_call(
         kernel,
         grid=(N // block_n,),
         in_specs=[
             pl.BlockSpec((block_n, 28), lambda i: (i, 0)),
             pl.BlockSpec((block_n, 8), lambda i: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((block_n, 28), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
             pl.BlockSpec((block_n,), lambda i: (i,)),
         ],
-        out_shape=[
-            jax.ShapeDtypeStruct((N, 28), state.dtype),
-            jax.ShapeDtypeStruct((N,), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(state, action)
+    )(state, action, cost.astype(jnp.int32), reward0.astype(jnp.float32))

@@ -1,4 +1,11 @@
-"""jit'd public wrapper for the batched env substep kernel."""
+"""jit'd public wrappers for the batched env substep kernel.
+
+Backend selection rule (the batched-native env layer's contract): the
+Pallas kernel is compiled on TPU; everywhere else the pure-jnp reference
+(`ref.py`) serves as the fallback — same ops, same order, bitwise equal
+to the kernel in f32 (asserted by tests/test_kernels.py).  ``interpret``
+mode remains available for cross-checking the kernel itself on CPU.
+"""
 
 from __future__ import annotations
 
@@ -9,10 +16,36 @@ import jax.numpy as jnp
 
 from repro.kernels.env_step.kernel import env_substep_batch
 from repro.kernels.env_step.ref import (
+    env_multi_substep_reference,
     env_substep_reference,
     pack_state,
     unpack_state,
 )
+
+BACKENDS = ("auto", "pallas", "pallas-interpret", "reference", "vmap")
+
+
+def default_backend() -> str:
+    """'pallas' (compiled) on TPU; 'vmap' elsewhere.
+
+    Off-TPU the auto choice is the generic masked-loop over the
+    vmap-lifted substep rather than the packed jnp 'reference': the
+    reference is bit-identical to the kernel (and the env oracle) when
+    called directly, but embedding a *structurally* different HLO body
+    in a larger program lets XLA CPU make different fusion/contraction
+    choices at the ulp level — sharing the vmap path's jaxpr is the only
+    way to keep whole-rollout streams bitwise identical across the
+    batched and per-lane engines, which is the conformance contract.
+    The 'reference' and 'pallas-interpret' backends remain explicitly
+    selectable (kernel cross-checks, TPU-less kernel debugging).
+    """
+    return "pallas" if jax.default_backend() == "tpu" else "vmap"
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown env_step backend {backend!r}; known: {BACKENDS}")
+    return default_backend() if backend == "auto" else backend
 
 
 @functools.partial(jax.jit, static_argnames=("n_sub", "block_n", "interpret"))
@@ -25,4 +58,45 @@ def env_step(
     )
 
 
-__all__ = ["env_step", "env_substep_reference", "pack_state", "unpack_state"]
+@functools.partial(
+    jax.jit, static_argnames=("max_cost", "block_n", "backend")
+)
+def env_multi_step(
+    state: jnp.ndarray,    # (N, 28)
+    action: jnp.ndarray,   # (N, 8)
+    cost: jnp.ndarray,     # (N,) int32
+    reward0: jnp.ndarray | None = None,   # (N,) f32 accumulator seed
+    *,
+    max_cost: int,
+    block_n: int = 256,
+    backend: str = "auto",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """THE fused hot-path call: lane ``n`` runs ``cost[n]`` physics
+    substeps in one pass over the state block; returns (new_state,
+    reward accumulated on top of ``reward0``)."""
+    backend = resolve_backend(backend)
+    if backend == "vmap":
+        raise ValueError(
+            "env_multi_step has no SoA path for the 'vmap' backend; "
+            "BatchEnvironment.v_multi_substep handles it"
+        )
+    if backend == "reference":
+        return env_multi_substep_reference(state, action, cost, reward0)
+    return env_substep_batch(
+        state, action, cost, reward0,
+        n_sub=max_cost, block_n=block_n,
+        interpret=(backend == "pallas-interpret"),
+    )
+
+
+__all__ = [
+    "BACKENDS",
+    "default_backend",
+    "env_multi_step",
+    "env_multi_substep_reference",
+    "env_step",
+    "env_substep_reference",
+    "pack_state",
+    "unpack_state",
+    "resolve_backend",
+]

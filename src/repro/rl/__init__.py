@@ -1,5 +1,6 @@
 from repro.rl.gae import gae
 from repro.rl.nets import ActorCritic
-from repro.rl.ppo import PPOConfig, train_device, train_host
+from repro.rl.ppo import PPOConfig, train, train_device, train_host
 
-__all__ = ["ActorCritic", "PPOConfig", "gae", "train_device", "train_host"]
+__all__ = ["ActorCritic", "PPOConfig", "gae", "train", "train_device",
+           "train_host"]

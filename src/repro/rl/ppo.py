@@ -1,5 +1,11 @@
 """PPO (Schulman et al. 2017) over any EnvPool engine — the paper's §4.2
-end-to-end integration.  Two drivers:
+end-to-end integration.
+
+``train(pool, cfg)`` is the engine-agnostic entry: it dispatches on the
+``core.protocol`` contract — functional (device-family) pools get the
+fully-jitted on-device driver, host pools the numpy driver — so the
+same call works over `device`, `device-masked`, `device-sharded`,
+`thread`, `forloop`, and `subprocess`.
 
   * ``train_device``: fully on-device — collect via the jitted pool
     (``lax.scan``, paper App. E) and update via jitted PPO epochs; the
@@ -23,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.device_pool import DeviceEnvPool
+from repro.core.protocol import EnvPool, is_functional
 from repro.rl.gae import gae
 from repro.rl.nets import ActorCritic
 from repro.optim import adamw, linear_decay
@@ -196,14 +203,22 @@ def train_device(
 # --------------------------------------------------------------------- #
 def train_host(
     env_pool,                     # ThreadEnvPool / ForLoopEnv / SubprocessEnv
-    spec,
-    cfg: PPOConfig,
+    spec=None,
+    cfg: PPOConfig | None = None,
     seed: int = 0,
     log_fn: Callable[[dict], None] | None = None,
     hidden: tuple[int, ...] = (256, 128, 64),
 ):
     """Returns (state, net, history, profile) where profile has the paper's
-    four timing buckets: env_step / inference / train / other."""
+    four timing buckets: env_step / inference / train / other.
+
+    ``spec`` defaults to ``env_pool.spec`` (every protocol engine
+    carries it); the explicit argument remains for backward compat.
+    """
+    if spec is None:
+        spec = env_pool.spec
+    if cfg is None:
+        cfg = PPOConfig()
     net = ActorCritic(spec, hidden=hidden)
     key = jax.random.PRNGKey(seed)
     key, k_init = jax.random.split(key)
@@ -289,3 +304,28 @@ def train_host(
         if log_fn:
             log_fn(history[-1])
     return state, net, history, prof
+
+
+# --------------------------------------------------------------------- #
+# engine-agnostic entry (core.protocol dispatch)
+# --------------------------------------------------------------------- #
+def train(
+    pool: "EnvPool",
+    cfg: PPOConfig,
+    seed: int = 0,
+    log_fn: Callable[[dict], None] | None = None,
+    hidden: tuple[int, ...] = (256, 128, 64),
+):
+    """PPO over ANY engine via the ``EnvPool`` protocol.
+
+    Functional (device-family) pools run the fully-jitted on-device
+    driver; host pools run the numpy driver.  Returns ``(state, net,
+    history)`` either way; call ``train_host`` directly if the paper's
+    Fig. 4 timing buckets are needed.
+    """
+    if is_functional(pool):
+        return train_device(pool, cfg, seed=seed, log_fn=log_fn, hidden=hidden)
+    state, net, history, _prof = train_host(
+        pool, pool.spec, cfg, seed=seed, log_fn=log_fn, hidden=hidden
+    )
+    return state, net, history

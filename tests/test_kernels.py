@@ -104,6 +104,62 @@ def test_env_step_kernel_sweep(N, block, nsub):
     np.testing.assert_allclose(rew, rref, atol=1e-5, rtol=1e-5)
 
 
+@pytest.mark.parametrize("N,block,max_cost", [(64, 64, 9), (128, 64, 5)])
+def test_env_multi_step_masked_kernel_vs_reference(N, block, max_cost):
+    """Per-lane cost masking: the kernel (interpret) must track the jnp
+    reference across ragged substep counts."""
+    from repro.kernels.env_step.ops import env_multi_step
+
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    state = jax.random.normal(ks[0], (N, 28)) * 0.3
+    state = state.at[:, 2].set(0.3)         # low torso: contacts active
+    action = jax.random.uniform(ks[1], (N, 8), minval=-1, maxval=1)
+    cost = jax.random.randint(ks[2], (N,), 0, max_cost + 1)
+    r0 = jax.random.normal(ks[3], (N,))
+    out_k, rew_k = env_multi_step(state, action, cost, r0,
+                                  max_cost=max_cost, block_n=block,
+                                  backend="pallas-interpret")
+    out_r, rew_r = env_multi_step(state, action, cost, r0,
+                                  max_cost=max_cost, block_n=block,
+                                  backend="reference")
+    np.testing.assert_allclose(out_k, out_r, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(rew_k, rew_r, atol=1e-5, rtol=1e-5)
+
+
+def test_env_multi_step_reference_bitwise_vs_perlane_env():
+    """The jnp reference fallback must be BIT-identical to iterated
+    per-lane MujocoLike.substep (the oracle), ragged costs included."""
+    import jax.numpy as jnp
+    from repro.envs.mujoco_like import MujocoLike
+    from repro.kernels.env_step.ops import env_multi_step
+    from repro.kernels.env_step.ref import pack_state
+
+    env = MujocoLike()
+    keys = jax.random.split(jax.random.PRNGKey(8), 32)
+    states = jax.vmap(env.init_state)(keys)
+    states = states.replace(pos=states.pos.at[:, 2].set(0.3))  # contacts
+    actions = env.sample_actions(jax.random.PRNGKey(9), 32)
+    cost = jax.random.randint(jax.random.PRNGKey(10), (32,), 0, 10)
+
+    flat = pack_state(states.pos, states.vel, states.rot, states.ang_vel,
+                      states.q, states.qd)
+    out, rew = env_multi_step(flat, actions, cost, states.reward_acc,
+                              max_cost=9, block_n=32, backend="reference")
+
+    def lane(s, a, c):
+        def body(i, s):
+            return jax.lax.cond(i < c, lambda s: env.substep(s, a),
+                                lambda s: s, s)
+        return jax.lax.fori_loop(0, 9, body, s)
+
+    stepped = jax.vmap(lane)(states, actions, cost)
+    ref = pack_state(stepped.pos, stepped.vel, stepped.rot, stepped.ang_vel,
+                     stepped.q, stepped.qd)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(rew),
+                                  np.asarray(stepped.reward_acc))
+
+
 def test_env_step_kernel_matches_env_class():
     """Kernel physics == MujocoLike.substep (the actual env layer)."""
     from repro.envs.mujoco_like import MujocoLike
