@@ -17,6 +17,13 @@ reporting aggregate FPS at mesh=1 vs mesh=D.  On CPU CI the mesh is
 simulated with ``XLA_FLAGS=--xla_force_host_platform_device_count`` —
 set *before* jax import, which is why this module only imports jax
 inside functions.
+
+``--schedule`` A/Bs the async scheduling policies (``core/scheduler.py``:
+fifo vs sjf vs hierarchical) on the long-tail-skew workload
+(``TokenSkew-v0``: 25% of episodes carry an 8x decode-cost multiplier)
+on the sharded engine at ``--mesh`` shards (default 4), writing the
+``BENCH_schedule.json`` artifact; ``--min-schedule-ratio`` gates CI on
+best(sjf, hierarchical)/fifo FPS.
 """
 
 from __future__ import annotations
@@ -164,6 +171,67 @@ def run_mesh(mesh: int, task: str = "TokenCopy-v0", envs_per_shard: int = 16,
     return rows
 
 
+def bench_schedule(task: str, schedule: str, envs_per_shard: int, shards: int,
+                   batch_frac: int = 4, steps: int = 60, iters: int = 3
+                   ) -> float:
+    """Aggregate FPS of an async sharded rollout under one scheduling
+    policy (N = envs_per_shard * shards, M = N / batch_frac)."""
+    import jax
+
+    from repro.core.registry import make
+    from repro.core.xla_loop import build_random_collect_fn
+
+    n = envs_per_shard * shards
+    pool = make(task, num_envs=n, batch_size=max(n // batch_frac, shards),
+                engine="device-sharded", num_shards=shards, schedule=schedule)
+    collect = build_random_collect_fn(pool, num_steps=steps)
+    ps, ts = pool.reset(jax.random.PRNGKey(0))
+    ps, ts, traj, _ = collect(ps, None, ts, jax.random.PRNGKey(1))  # warmup
+    jax.block_until_ready(traj.reward)
+    frames = 0.0
+    t0 = time.time()
+    for i in range(iters):
+        ps, ts, traj, _ = collect(ps, None, ts, jax.random.PRNGKey(2 + i))
+        frames += float(traj.step_cost.sum())
+    jax.block_until_ready(traj.reward)
+    return frames / (time.time() - t0)
+
+
+def run_schedule(mesh: int, task: str = "TokenSkew-v0",
+                 envs_per_shard: int = 16, steps: int = 60, iters: int = 3
+                 ) -> tuple[list[str], dict]:
+    """Scheduling-policy A/B on the long-tail-skew workload: fifo vs
+    sjf vs hierarchical on the sharded engine at mesh=D.  The win comes
+    from cost-homogeneous recv blocks: the fused multi-substep pads each
+    block to its max cost, so mixing one heavy lane into a cheap block
+    multiplies its latency (paper Fig. 2a, per shard)."""
+    rows: list[str] = []
+    unit = fps_unit(task)
+    fps: dict[str, float] = {}
+    for schedule in ("fifo", "sjf", "hierarchical"):
+        f = bench_schedule(task, schedule, envs_per_shard, mesh,
+                           steps=steps, iters=iters)
+        fps[schedule] = f
+        rows.append(
+            f"schedule_{task}_{schedule}_mesh{mesh},"
+            f"{1e6/max(f,1e-9):.3f},{f:.0f} {unit}/s"
+        )
+    best = max("sjf", "hierarchical", key=lambda s: fps[s])
+    ratio = fps[best] / max(fps["fifo"], 1e-9)
+    rows.append(
+        f"schedule_{task}_BEST_RATIO,{ratio:.3f},{best}/fifo FPS at mesh{mesh}"
+    )
+    summary = {
+        "task": task,
+        "mesh": mesh,
+        "envs_per_shard": envs_per_shard,
+        "fps": fps,
+        "best": best,
+        "best_over_fifo": ratio,
+    }
+    return rows, summary
+
+
 def run_ab(task: str = "Ant-v3", num_envs: int = 64, steps: int = 40,
            iters: int = 3) -> tuple[list[str], dict]:
     """Batched-native vs forced-vmap A/B on the same sync pool — the
@@ -221,6 +289,13 @@ def main(argv: list[str] | None = None) -> int:
                          "(0 = run the full engine table instead)")
     ap.add_argument("--ab", action="store_true",
                     help="batched-native vs vmap-lifted A/B on MujocoLike")
+    ap.add_argument("--schedule", action="store_true",
+                    help="scheduling-policy A/B (fifo/sjf/hierarchical) on "
+                         "the long-tail-skew workload; uses --mesh shards "
+                         "(default 4); writes BENCH_schedule.json")
+    ap.add_argument("--min-schedule-ratio", type=float, default=0.0,
+                    help="fail (exit 1) if best(sjf,hierarchical)/fifo FPS "
+                         "drops below this (CI gate)")
     ap.add_argument("--task", default="TokenCopy-v0")
     ap.add_argument("--envs-per-shard", type=int, default=16)
     ap.add_argument("--num-envs", type=int, default=64)
@@ -237,15 +312,28 @@ def main(argv: list[str] | None = None) -> int:
 
     rows: list[str] = []
     extra: dict = {}
-    if args.mesh:
+    if args.mesh or args.schedule:
+        mesh = args.mesh or 4
         # must precede ANY jax import in this process
         if "jax" in sys.modules:
-            raise RuntimeError("--mesh requires jax to not be imported yet")
+            raise RuntimeError(
+                "--mesh/--schedule require jax to not be imported yet"
+            )
         flags = os.environ.get("XLA_FLAGS", "")
         if "host_platform_device_count" not in flags:
             os.environ["XLA_FLAGS"] = (
-                f"{flags} --xla_force_host_platform_device_count={args.mesh}"
+                f"{flags} --xla_force_host_platform_device_count={mesh}"
             ).strip()
+    if args.schedule:
+        task = args.task if args.task != "TokenCopy-v0" else "TokenSkew-v0"
+        if args.smoke:
+            args.envs_per_shard, args.steps, args.iters = 16, 24, 1
+        rows, summary = run_schedule(mesh, task, args.envs_per_shard,
+                                     args.steps, args.iters)
+        extra = {"mode": "schedule", "schedule": summary}
+        if args.json is None:
+            args.json = os.path.join(ROOT, "BENCH_schedule.json")
+    elif args.mesh:
         if args.smoke:
             args.envs_per_shard, args.steps, args.iters = 16, 10, 1
         rows = run_mesh(args.mesh, args.task, args.envs_per_shard,
@@ -271,6 +359,15 @@ def main(argv: list[str] | None = None) -> int:
                   f"{args.min_ab_ratio}")
             return 1
         print(f"[bench] ratio {ratio:.3f} >= {args.min_ab_ratio} OK")
+    if extra.get("mode") == "schedule" and args.min_schedule_ratio > 0:
+        ratio = extra["schedule"]["best_over_fifo"]
+        best = extra["schedule"]["best"]
+        if ratio < args.min_schedule_ratio:
+            print(f"[bench] FAIL: {best}/fifo ratio {ratio:.3f} < "
+                  f"{args.min_schedule_ratio}")
+            return 1
+        print(f"[bench] {best}/fifo ratio {ratio:.3f} >= "
+              f"{args.min_schedule_ratio} OK")
     return 0
 
 

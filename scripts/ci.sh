@@ -21,5 +21,12 @@ if [ -z "${CI_SKIP_BENCH:-}" ]; then
     # absorbs 2-core CI timer noise; real regressions are step changes).
     # Writes BENCH_throughput.json with the A/B numbers.
     python benchmarks/bench_throughput.py --ab --smoke --min-ab-ratio 0.7
+
+    echo "== scheduling-policy A/B smoke (fifo vs sjf/hierarchical, mesh=4) =="
+    # the cost-aware schedulers must keep beating fifo on the long-tail
+    # skew workload (acceptance floor 1.15x; typical ≥ 2x — the 1.15
+    # margin absorbs CI timer noise).  Writes BENCH_schedule.json.
+    python benchmarks/bench_throughput.py --schedule --smoke \
+        --min-schedule-ratio 1.15
 fi
 echo "CI OK"

@@ -16,6 +16,8 @@ from __future__ import annotations
 
 import multiprocessing as mp
 import pickle
+import threading
+import traceback
 from multiprocessing import shared_memory
 from typing import Callable
 
@@ -114,19 +116,24 @@ def _subproc_worker(conn, shm_name, shape, dtype_str, lo, hi, factory_bytes):
             cmd, payload = conn.recv()
             if cmd == "close":
                 break
-            if cmd == "reset":
-                for i, e in enumerate(envs):
-                    obs_block[lo + i] = e.reset()
-                conn.send(("ok", None))
-            elif cmd == "step":
-                actions = payload
-                rews, dones = [], []
-                for i, e in enumerate(envs):
-                    obs, rew, done, _ = e.step(actions[i])
-                    obs_block[lo + i] = obs  # one IPC copy saved vs pipe
-                    rews.append(rew)
-                    dones.append(done)
-                conn.send(("ok", (rews, dones)))
+            try:
+                if cmd == "reset":
+                    for i, e in enumerate(envs):
+                        obs_block[lo + i] = e.reset()
+                    conn.send(("ok", None))
+                elif cmd == "step":
+                    actions = payload
+                    rews, dones = [], []
+                    for i, e in enumerate(envs):
+                        obs, rew, done, _ = e.step(actions[i])
+                        obs_block[lo + i] = obs  # one IPC copy saved vs pipe
+                        rews.append(rew)
+                        dones.append(done)
+                    conn.send(("ok", (rews, dones)))
+            except Exception:
+                # env raised: ship the traceback instead of dying with
+                # the reply unsent (which would hang the parent's recv)
+                conn.send(("err", traceback.format_exc()))
     finally:
         shm.close()
         conn.close()
@@ -178,32 +185,66 @@ class SubprocessEnv(_SyncSendRecv):
             self._procs.append(p)
             self._bounds.append((lo, hi))
         self._closed = False
+        self._close_lock = threading.Lock()
+        self._error: str | None = None
         self._pending = None
 
+    # ------------------------------------------------------------------ #
+    # worker error propagation: the first traceback shipped back by a
+    # worker puts the pool in a terminal error state, re-raised by every
+    # subsequent reset/step/recv (instead of hanging on a dead pipe)
+    # ------------------------------------------------------------------ #
+    def _raise_worker_error(self) -> None:
+        raise RuntimeError(
+            "SubprocessEnv worker failed (pool is dead; close() it):\n"
+            + (self._error or "")
+        )
+
+    def _recv_checked(self, conn):
+        tag, payload = conn.recv()
+        if tag == "err":
+            self._error = payload
+            self._raise_worker_error()
+        return payload
+
+    def recv(self) -> dict[str, np.ndarray]:
+        if self._error is not None:
+            self._raise_worker_error()
+        return super().recv()
+
     def reset(self) -> dict[str, np.ndarray]:
+        if self._error is not None:
+            self._raise_worker_error()
         for c in self._conns:
             c.send(("reset", None))
         for c in self._conns:
-            c.recv()
+            self._recv_checked(c)
         out = _result_dict(self.num_envs, self.spec.obs_spec)
         out["obs"][:] = self._obs  # batching copy (the paper counts this)
         return out
 
     def step(self, actions, env_ids=None) -> dict[str, np.ndarray]:
+        if self._error is not None:
+            self._raise_worker_error()
         for c, (lo, hi) in zip(self._conns, self._bounds):
             c.send(("step", actions[lo:hi]))
         out = _result_dict(self.num_envs, self.spec.obs_spec)
         for c, (lo, hi) in zip(self._conns, self._bounds):
-            _, (rews, dones) = c.recv()
+            rews, dones = self._recv_checked(c)
             out["reward"][lo:hi] = rews
             out["done"][lo:hi] = dones
         out["obs"][:] = self._obs
         return out
 
     def close(self) -> None:
-        if self._closed:
-            return
-        self._closed = True
+        """Idempotent and safe under concurrent calls (an explicit
+        ``close()`` racing ``__del__`` at interpreter shutdown), like
+        ``ThreadEnvPool.close()``: exactly one caller wins the flag flip
+        under the lock and performs the shutdown."""
+        with self._close_lock:
+            if self._closed:
+                return
+            self._closed = True
         for c in self._conns:
             try:
                 c.send(("close", None))

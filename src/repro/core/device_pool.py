@@ -5,11 +5,13 @@ EnvPool's C++ machinery is re-thought for a synchronous dataflow machine:
   ThreadPool workers      -> vmap lanes over a structure-of-arrays pytree
   ActionBufferQueue       -> pre-allocated (N, ...) action table, scatter on send
   StateBufferQueue block  -> the (M, ...) output batch, one gather on recv
-  "recv waits for the     -> shortest-job-first top-M selection on the
-   first M finished"         data-dependent step_cost; on a synchronous
-                             machine, waiting IS computing, so "wait for
-                             the first M" becomes "compute only the M
-                             that would finish first"
+  "recv waits for the     -> a pluggable top-M selection on the data-
+   first M finished"         dependent step_cost (``core/scheduler.py``;
+                             ``schedule=`` picks fifo/sjf/hierarchical);
+                             on a synchronous machine, waiting IS
+                             computing, so "wait for the first M"
+                             becomes "compute only the M that would
+                             finish first"
   sync mode (M == N)      -> step every lane; the fused multi-substep
                              pads all lanes to the batch max cost
                              (paper Fig. 2a)
@@ -41,17 +43,18 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core.scheduler import (
+    HAS_ACTION,
+    READY,
+    WAITING_ACTION,
+    SchedState,
+    Scheduler,
+    get_scheduler,
+)
 from repro.core.specs import EnvSpec, TimeStep
 from repro.envs.base import Environment
 from repro.envs.batch import as_batch_env
 from repro.utils.pytree import pytree_dataclass, tree_gather
-
-# phases
-WAITING_ACTION = 0   # result consumed; agent owes us an action
-HAS_ACTION = 1       # action stored; step not yet executed
-READY = 2            # unconsumed result available
-
-_BIG = jnp.float32(1e9)
 
 
 def derive_env_keys(key: jax.Array, num_envs: int) -> tuple[jax.Array, jax.Array]:
@@ -97,6 +100,7 @@ class DeviceEnvPool:
         mode: str = "async",
         aging: float = 1.0,
         batched: bool | None = None,
+        schedule: str | Scheduler = "fifo",
     ):
         if batch_size is None:
             batch_size = num_envs
@@ -106,6 +110,11 @@ class DeviceEnvPool:
             raise ValueError(f"unknown mode {mode!r}")
         if mode == "sync" and batch_size != num_envs:
             raise ValueError("sync mode requires batch_size == num_envs")
+        # selection policy (core/scheduler.py): which M lanes each recv
+        # serves.  ``aging`` parameterizes the fifo policy's starvation
+        # guard; an explicit Scheduler instance wins over both knobs
+        # (the sharded pool passes the hierarchical policy this way).
+        self.scheduler = get_scheduler(schedule, aging=aging)
         self.env = env
         # THE hot-path engine: a batched-native view of the env.  All
         # recv/tick bodies drive batched primitives (one fused
@@ -118,9 +127,6 @@ class DeviceEnvPool:
         self.num_envs = int(num_envs)
         self.batch_size = int(batch_size)
         self.mode = mode
-        # aging makes queue-time lower effective priority -> no starvation
-        # (the FIFO-ness of the real StateBufferQueue, recovered softly)
-        self.aging = float(aging)
 
     # ------------------------------------------------------------------ #
     # construction / reset
@@ -161,6 +167,12 @@ class DeviceEnvPool:
     # ------------------------------------------------------------------ #
     # send — ActionBufferQueue enqueue
     # ------------------------------------------------------------------ #
+    def _sched_view(self, ps: PoolState) -> SchedState:
+        """The scheduler's lane signals, aliased onto PoolState fields."""
+        return SchedState(
+            phase=ps.phase, cost=ps.cost, send_tick=ps.send_tick, tick=ps.tick
+        )
+
     def send(self, ps: PoolState, actions: jnp.ndarray, env_ids: jnp.ndarray
              ) -> PoolState:
         """Store actions for ``env_ids``; returns immediately (paper §3.1)."""
@@ -168,11 +180,12 @@ class DeviceEnvPool:
         sel_states = tree_gather(ps.env_states, env_ids)
         costs = self.benv.v_step_cost(sel_states, actions)
         costs = jnp.clip(costs, self.spec.min_cost, self.spec.max_cost)
+        ss = self.scheduler.enqueue(self._sched_view(ps), env_ids, costs)
         return ps.replace(
             actions=ps.actions.at[env_ids].set(actions.astype(ps.actions.dtype)),
-            phase=ps.phase.at[env_ids].set(HAS_ACTION),
-            cost=ps.cost.at[env_ids].set(costs.astype(jnp.int32)),
-            send_tick=ps.send_tick.at[env_ids].set(ps.tick),
+            phase=ss.phase,
+            cost=ss.cost,
+            send_tick=ss.send_tick,
             progress=ps.progress.at[env_ids].set(0),
         )
 
@@ -184,24 +197,8 @@ class DeviceEnvPool:
             return self._recv_masked(ps)
         return self._recv_topm(ps)
 
-    def _priority(self, ps: PoolState) -> jnp.ndarray:
-        """Lower = served earlier. READY first (completion order ~ FIFO),
-        then HAS_ACTION by predicted cost minus queue age (SJF + aging),
-        WAITING last (should never be selected in a well-formed loop)."""
-        age = (ps.tick - ps.send_tick).astype(jnp.float32)
-        ready_p = -_BIG + ps.send_tick.astype(jnp.float32)
-        has_p = ps.cost.astype(jnp.float32) - self.aging * age
-        wait_p = _BIG
-        return jnp.where(
-            ps.phase == READY,
-            ready_p,
-            jnp.where(ps.phase == HAS_ACTION, has_p, wait_p),
-        )
-
     def _recv_topm(self, ps: PoolState) -> tuple[PoolState, TimeStep]:
-        M = self.batch_size
-        _, idx = lax.top_k(-self._priority(ps), M)
-        idx = idx.astype(jnp.int32)
+        idx = self.scheduler.select(self._sched_view(ps), self.batch_size)
 
         sel_states = tree_gather(ps.env_states, idx)
         sel_actions = ps.actions[idx]
@@ -246,9 +243,10 @@ class DeviceEnvPool:
         env_states = jax.tree.map(
             lambda full, upd: full.at[idx].set(upd), ps.env_states, new_states
         )
+        ss = self.scheduler.complete(self._sched_view(ps), idx)
         ps = ps.replace(
             env_states=env_states,
-            phase=ps.phase.at[idx].set(WAITING_ACTION),
+            phase=ss.phase,
             r_reward=ps.r_reward.at[idx].set(out.reward),
             r_done=ps.r_done.at[idx].set(out.done),
             r_term=ps.r_term.at[idx].set(out.terminated),
@@ -256,7 +254,7 @@ class DeviceEnvPool:
             r_ep_return=ps.r_ep_return.at[idx].set(out.episode_return),
             r_ep_length=ps.r_ep_length.at[idx].set(out.episode_length),
             r_cost=ps.r_cost.at[idx].set(out.step_cost),
-            tick=ps.tick + 1,
+            tick=ss.tick,
         )
         return ps, out
 
@@ -317,12 +315,9 @@ class DeviceEnvPool:
             return jnp.sum(s.phase == READY) < M
 
         ps = lax.while_loop(not_enough, self._tick, ps)
-        # completion order ≈ send_tick order among READY
-        prio = jnp.where(
-            ps.phase == READY, ps.send_tick.astype(jnp.float32), _BIG
-        )
-        _, idx = lax.top_k(-prio, M)
-        idx = idx.astype(jnp.int32)
+        # completion order ≈ send_tick order among READY (policy-
+        # independent by the select_ready contract)
+        idx = self.scheduler.select_ready(self._sched_view(ps), M)
         sel_states = tree_gather(ps.env_states, idx)
         out = TimeStep(
             obs=self.benv.v_observe(sel_states),
@@ -335,9 +330,8 @@ class DeviceEnvPool:
             episode_length=ps.r_ep_length[idx],
             step_cost=ps.r_cost[idx],
         )
-        ps = ps.replace(
-            phase=ps.phase.at[idx].set(WAITING_ACTION), tick=ps.tick + 1
-        )
+        ss = self.scheduler.complete(self._sched_view(ps), idx)
+        ps = ps.replace(phase=ss.phase, tick=ss.tick)
         return ps, out
 
     # ------------------------------------------------------------------ #
@@ -375,9 +369,11 @@ def make_pool(
     batch_size: int | None = None,
     mode: str | None = None,
     batched: bool | None = None,
+    schedule: str | Scheduler = "fifo",
 ) -> DeviceEnvPool:
     """EnvPool constructor with the paper's mode convention: sync iff
     batch_size in (None, num_envs)."""
     if mode is None:
         mode = "sync" if batch_size in (None, num_envs) else "async"
-    return DeviceEnvPool(env, num_envs, batch_size, mode=mode, batched=batched)
+    return DeviceEnvPool(env, num_envs, batch_size, mode=mode, batched=batched,
+                         schedule=schedule)

@@ -16,11 +16,14 @@ envs in the paper's Table 2 comparison.
 from __future__ import annotations
 
 import threading
+import time
+import traceback
 from typing import Any, Callable
 
 import numpy as np
 
 from repro.core.buffers import ActionBufferQueue, StateBufferQueue
+from repro.core.scheduler import SCHEDULES, numpy_priority
 from repro.core.specs import EnvSpec
 
 _RESET = object()  # sentinel action: reset the env
@@ -104,13 +107,33 @@ class ThreadEnvPool:
         env_fns: list[Callable[[], HostEnv]],
         batch_size: int | None = None,
         num_threads: int | None = None,
+        schedule: str = "fifo",
+        aging: float = 1.0,
     ):
         self.num_envs = len(env_fns)
         self.batch_size = batch_size or self.num_envs
         if self.batch_size > self.num_envs:
             raise ValueError("batch_size cannot exceed num_envs")
+        if schedule not in ("fifo", "sjf"):
+            raise ValueError(
+                f"thread engine supports schedules ('fifo', 'sjf'); "
+                f"{schedule!r} is the cross-shard policy "
+                "(use engine='device-sharded')" if schedule in SCHEDULES
+                else f"unknown schedule {schedule!r}; known: {SCHEDULES}"
+            )
         # paper §3.3: thread count bounded by cores; envs 2-3x threads
         self.num_threads = num_threads or min(self.num_envs, _cpu_count())
+        # numpy mirror of core/scheduler.py: ``send`` enqueues work in
+        # policy-priority order, so workers pull (and thus finish) the
+        # scheduled lanes first and recv's "first M finished" block is
+        # policy-shaped.  Cost estimates are the last observed per-env
+        # step_cost (the host-side SJF estimator); fifo keeps the
+        # caller's order — the pre-scheduler behavior, bitwise.
+        self.schedule = schedule
+        self.aging = float(aging)
+        self._est_cost = np.ones(self.num_envs, np.float32)
+        self._send_tick = np.zeros(self.num_envs, np.float32)
+        self._tick = 0
 
         self._envs = [fn() for fn in env_fns]
         self.spec = self._envs[0].spec
@@ -131,6 +154,10 @@ class ThreadEnvPool:
         self._states = StateBufferQueue(fields, self.batch_size, self.num_envs)
         self._running = True
         self._close_lock = threading.Lock()
+        # first worker exception: (env_id, formatted traceback).  recv
+        # re-raises it instead of waiting out the block timeout.
+        self._error: tuple[int, str] | None = None
+        self._error_lock = threading.Lock()
         self._threads = [
             threading.Thread(target=self._worker, daemon=True, name=f"envpool-{i}")
             for i in range(self.num_threads)
@@ -146,11 +173,21 @@ class ThreadEnvPool:
                 return
             env_id, action = item
             env = self._envs[env_id]
-            if action is _RESET:
-                obs = env.reset()
-                rew, done, info = 0.0, False, {}
-            else:
-                obs, rew, done, info = env.step(action)
+            try:
+                if action is _RESET:
+                    obs = env.reset()
+                    rew, done, info = 0.0, False, {}
+                else:
+                    obs, rew, done, info = env.step(action)
+            except Exception:
+                # the failed item produces no result slot, so its block
+                # can never fill — record the traceback for recv to
+                # re-raise (the pool is in a terminal error state) and
+                # keep the worker alive for a clean close()
+                with self._error_lock:
+                    if self._error is None:
+                        self._error = (env_id, traceback.format_exc())
+                continue
             blk, slot = self._states.acquire_slot()
             blk.write(
                 slot,
@@ -175,12 +212,45 @@ class ThreadEnvPool:
         self._actions.put_batch([(i, _RESET) for i in range(self.num_envs)])
 
     def send(self, actions: np.ndarray, env_ids: np.ndarray) -> None:
-        self._actions.put_batch(
-            [(int(e), a) for e, a in zip(env_ids, actions)]
+        items = [(int(e), a) for e, a in zip(env_ids, actions)]
+        if self.schedule != "fifo":
+            ids = np.asarray(env_ids, np.int64)
+            pri = numpy_priority(
+                self.schedule, self._est_cost[ids], self._send_tick[ids],
+                self._tick, self.aging,
+            )
+            items = [items[j] for j in np.argsort(pri, kind="stable")]
+            self._send_tick[ids] = self._tick
+        self._actions.put_batch(items)
+
+    def _raise_worker_error(self) -> None:
+        env_id, tb = self._error  # type: ignore[misc]
+        raise RuntimeError(
+            f"ThreadEnvPool worker failed on env {env_id} (pool is dead; "
+            f"close() it):\n{tb}"
         )
 
     def recv(self, timeout: float | None = 60.0) -> dict[str, np.ndarray]:
-        return self._states.take(timeout=timeout)
+        """One block of ``batch_size`` results.  A worker exception is
+        re-raised here (and on every later recv) instead of letting the
+        never-filling block run out the full timeout."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            if self._error is not None:
+                self._raise_worker_error()
+            wait = 0.05
+            if deadline is not None:
+                wait = min(wait, max(deadline - time.monotonic(), 0.0))
+            try:
+                out = self._states.take(timeout=wait)
+                break
+            except TimeoutError:
+                if deadline is not None and time.monotonic() >= deadline:
+                    raise
+        # refresh the per-env cost estimates the sjf mirror orders by
+        self._est_cost[out["env_id"]] = np.maximum(out["step_cost"], 1)
+        self._tick += 1
+        return out
 
     def step(self, actions: np.ndarray, env_ids: np.ndarray
              ) -> dict[str, np.ndarray]:

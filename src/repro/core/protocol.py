@@ -20,6 +20,15 @@ Two calling conventions exist underneath:
 handle (``reset()/step()/send()/recv()`` all yielding ``TimeStep``
 batches) that every driver can loop over, while ``is_functional``
 lets jit-native drivers keep the pure path when it exists.
+
+Async engines additionally share the scheduling-policy axis
+(``core/scheduler.py``, selected by ``make(..., schedule=...)``): which
+M lanes each ``recv`` serves is a pluggable policy — ``"fifo"``
+(default, the classic engine behavior), ``"sjf"``, or
+``"hierarchical"`` (sharded) — consumed by the functional engines as
+pure ``SchedState`` primitives and by the host thread engine through
+the numpy mirror.  The policy never changes per-env trajectories (those
+depend only on init keys and routed actions), only the serving order.
 """
 
 from __future__ import annotations

@@ -4,6 +4,9 @@
     env = make("Pong-v5", num_envs=100, batch_size=90)  # device pool, async
     env = make("TokenCopy-v0", num_envs=256,
                engine="device-sharded", num_shards=4)   # multi-device pool
+    env = make("TokenSkew-v0", num_envs=256, batch_size=64,
+               engine="device-sharded", num_shards=4,
+               schedule="hierarchical")                 # + scheduling policy
     env = make("Ant-v3", engine="thread", num_envs=64)  # host thread pool
     env = make("Ant-v3", engine="subprocess", ...)      # gym.vector baseline
 
@@ -88,6 +91,7 @@ def make(
     mesh: Any = None,
     seed: int = 0,
     batched: bool | None = None,
+    schedule: str = "fifo",
     **env_kwargs: Any,
 ):
     """Create a vectorized env pool, EnvPool-style.
@@ -97,6 +101,13 @@ def make(
     None (default) lets the env pick its native one (e.g. the Pallas
     ``env_step`` kernel for MujocoLike), False forces the generic
     vmap-lifting adapter (the A/B baseline).
+
+    ``schedule`` picks the async selection policy (``core/scheduler.py``:
+    ``"fifo"`` — the default, preserving the classic engine behavior —
+    ``"sjf"``, or ``"hierarchical"`` for ``device-sharded``).  The
+    host thread engine consumes the same enum through the numpy mirror;
+    the synchronous baselines (forloop/subprocess, M == N by
+    construction) have no selection freedom and only accept ``"fifo"``.
     """
     if engine in ("device", "device-masked"):
         env = _jax_env(task_id, **env_kwargs)
@@ -104,7 +115,7 @@ def make(
         if mode is None:
             mode = "sync" if batch_size in (None, num_envs) else "async"
         return DeviceEnvPool(env, num_envs, batch_size, mode=mode,
-                             batched=batched)
+                             batched=batched, schedule=schedule)
 
     if engine == "device-sharded":
         from repro.core.sharded_pool import ShardedDeviceEnvPool
@@ -113,7 +124,7 @@ def make(
         return ShardedDeviceEnvPool(
             env, num_envs, batch_size,
             mesh=mesh if mesh is not None else num_shards,
-            batched=batched,
+            batched=batched, schedule=schedule,
         )
 
     if engine == "thread":
@@ -127,7 +138,14 @@ def make(
             ))
             for i in range(num_envs)
         ]
-        return ThreadEnvPool(fns, batch_size=batch_size, num_threads=num_threads)
+        return ThreadEnvPool(fns, batch_size=batch_size,
+                             num_threads=num_threads, schedule=schedule)
+
+    if engine in ("forloop", "subprocess") and schedule != "fifo":
+        raise ValueError(
+            f"engine {engine!r} is synchronous (M == N): no selection "
+            f"freedom, schedule must stay 'fifo' (got {schedule!r})"
+        )
 
     if engine == "forloop":
         from repro.core.baselines import ForLoopEnv
@@ -214,6 +232,16 @@ def _ensure_defaults() -> None:
     register("Ant-v3", MujocoLike)
     register("MujocoLike-Ant-v3", MujocoLike)
     register("TokenCopy-v0", TokenEnv)
+    # long-tail-skew workloads (heterogeneous per-episode step cost —
+    # the scheduling-policy benchmark; see bench_throughput --schedule)
+    register(
+        "TokenSkew-v0",
+        lambda **kw: TokenEnv(**{"heavy_frac": 0.25, "heavy_scale": 8, **kw}),
+    )
+    register(
+        "AntSkew-v3",
+        lambda **kw: MujocoLike(**{"heavy_frac": 0.25, "heavy_iters": 4, **kw}),
+    )
 
     register_py("CartPole-v1", PyCartPole)
     register_py("Pendulum-v1", PyPendulum)

@@ -5,10 +5,14 @@ hardware (1M FPS Atari / 3M FPS MuJoCo on a DGX-A100, §4.1); SRL (Mei et
 al. 2023) shows the same engine parallelism extends across workers.  Here
 the ``PoolState`` pytree of N envs is sharded across a 1-D JAX device
 mesh with ``shard_map``: each of the D shards owns N/D envs and runs its
-own top-(M/D) shortest-job-first selection, so ``init``/``send``/``recv``
-execute one per-shard selection with **no cross-device gathers on the hot
-path** — the only inter-device traffic is whatever the caller does with
-the concatenated batch (nothing, when the rollout stays in ``lax.scan``).
+own top-(M/D) selection under the pool's ``schedule=`` policy
+(``core/scheduler.py`` — fifo / sjf per-shard, or ``hierarchical``,
+which all-gathers one fixed-size per-shard candidate *cost* matrix so
+every shard applies the same global admission threshold), so
+``init``/``send``/``recv`` execute with **no gathers of env data on the
+hot path** — the only other inter-device traffic is whatever the caller
+does with the concatenated batch (nothing, when the rollout stays in
+``lax.scan``).
 
 Layout: every ``PoolState`` leaf gains a leading shard dim —
 ``(D, N/D, ...)`` for env arrays, ``(D,)`` for per-shard scalars — placed
@@ -38,6 +42,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.device_pool import DeviceEnvPool, PoolState, derive_env_keys
+from repro.core.scheduler import get_scheduler
 from repro.core.specs import TimeStep
 from repro.envs.base import Environment
 from repro.utils.pytree import tree_slice
@@ -82,6 +87,7 @@ class ShardedDeviceEnvPool:
         axis_name: str = ENV_AXIS,
         aging: float = 1.0,
         batched: bool | None = None,
+        schedule: str = "fifo",
     ):
         if batch_size is None:
             batch_size = num_envs
@@ -108,10 +114,17 @@ class ShardedDeviceEnvPool:
         self.num_shards = d
         # per-shard bodies drive the SAME batched-native primitives as
         # the single-device engine (one fused multi-substep per shard
-        # per recv) — sharding is a pure layout transform on top
+        # per recv) — sharding is a pure layout transform on top.  The
+        # scheduler is resolved here so ``hierarchical`` gets the mesh
+        # context (its select all-gathers per-shard candidate costs over
+        # ``axis_name`` inside the recv shard_map; fifo/sjf stay
+        # communication-free per-shard policies).
+        self.scheduler = get_scheduler(
+            schedule, aging=aging, axis_name=axis_name, num_shards=d
+        )
         self.inner = DeviceEnvPool(
             env, num_envs // d, batch_size // d, mode=mode, aging=aging,
-            batched=batched,
+            batched=batched, schedule=self.scheduler,
         )
 
     # ------------------------------------------------------------------ #

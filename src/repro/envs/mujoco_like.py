@@ -44,25 +44,40 @@ class MujocoLikeState:
     rng: jax.Array
     ep_return: jnp.ndarray
     reward_acc: jnp.ndarray
+    cost_scale: jnp.ndarray  # per-episode solver-iteration multiplier (skew)
 
 
 class MujocoLike(Environment):
-    """Ant-lite; env name mirrors EnvPool's ``Ant-v3``."""
+    """Ant-lite; env name mirrors EnvPool's ``Ant-v3``.
 
-    def __init__(self, max_episode_steps: int = 1000):
+    ``heavy_frac``/``heavy_iters`` configure the long-tail-skew
+    workload: each episode draws a persistent solver-iteration
+    multiplier — ``heavy_iters`` with probability ``heavy_frac``, else 1
+    — modeling scenes whose contact solver needs many more Newton/PGS
+    iterations.  The draw folds the episode init key (no extra
+    randomness consumed), so the default config is unchanged and all
+    engines agree on which episodes are heavy.
+    """
+
+    def __init__(self, max_episode_steps: int = 1000,
+                 heavy_frac: float = 0.0, heavy_iters: int = 4):
+        self.heavy_frac = float(heavy_frac)
+        self.heavy_iters = int(heavy_iters)
+        iters = self.heavy_iters if heavy_frac > 0 else 1
         self.spec = EnvSpec(
             name="MujocoLike-Ant-v3",
             obs_spec=ArraySpec((OBS_DIM,), jnp.float32),
             act_spec=ArraySpec((N_JOINTS,), jnp.float32, -1.0, 1.0),
             max_episode_steps=max_episode_steps,
-            min_cost=5,   # base physics substeps
-            max_cost=9,   # + up to 4 contact-solver iterations
+            min_cost=5,             # base physics substeps
+            max_cost=5 + 4 * iters,  # + contact-solver iterations
         )
 
     def init_state(self, key: jax.Array) -> MujocoLikeState:
         rng, k1, k2 = jax.random.split(key, 3)
         q = jax.random.uniform(k1, (N_JOINTS,), jnp.float32, -0.1, 0.1)
         qd = jax.random.normal(k2, (N_JOINTS,)) * 0.05
+        heavy = jax.random.uniform(jax.random.fold_in(key, 7)) < self.heavy_frac
         z = jnp.float32(0.0)
         return MujocoLikeState(
             pos=jnp.array([0.0, 0.0, 0.55], jnp.float32),
@@ -71,6 +86,7 @@ class MujocoLike(Environment):
             ang_vel=jnp.zeros((3,), jnp.float32),
             q=q, qd=qd,
             t=jnp.int32(0), rng=rng, ep_return=z, reward_acc=z,
+            cost_scale=jnp.where(heavy, self.heavy_iters, 1).astype(jnp.int32),
         )
 
     # -------------------------------------------------------------- #
@@ -129,8 +145,9 @@ class MujocoLike(Environment):
         )
 
     def step_cost(self, s: MujocoLikeState, action) -> jnp.ndarray:
-        # 5 base substeps + 1 solver iteration per active contact
-        return jnp.int32(5) + self.n_contacts(s)
+        # 5 base substeps + solver iterations per active contact
+        # (cost_scale > 1 only under the heavy_frac skew config)
+        return jnp.int32(5) + self.n_contacts(s) * s.cost_scale
 
     def terminal(self, s: MujocoLikeState) -> jnp.ndarray:
         healthy = (s.pos[2] > 0.2) & (s.pos[2] < 1.0) & (
@@ -233,7 +250,7 @@ class MujocoLikeBatch(VmapBatchEnv):
     # ``_leg_foot_height``/``n_contacts``, so it has ONE definition
     # -------------------------------------------------------------- #
     def v_step_cost(self, s: MujocoLikeState, actions) -> jnp.ndarray:
-        return jnp.int32(5) + self.env.n_contacts(s)
+        return jnp.int32(5) + self.env.n_contacts(s) * s.cost_scale
 
     def v_observe(self, s: MujocoLikeState) -> jnp.ndarray:
         foot_h = self.env._leg_foot_height(s)

@@ -21,31 +21,45 @@ from repro.utils.pytree import pytree_dataclass
 
 @pytree_dataclass
 class TokenEnvState:
-    target: jnp.ndarray    # (ep_len,) hidden tokens to copy
-    emitted: jnp.ndarray   # (ep_len,) tokens the agent produced
+    target: jnp.ndarray      # (ep_len,) hidden tokens to copy
+    emitted: jnp.ndarray     # (ep_len,) tokens the agent produced
     t: jnp.ndarray
     rng: jax.Array
     ep_return: jnp.ndarray
     reward_acc: jnp.ndarray
+    cost_scale: jnp.ndarray  # per-episode decode-cost multiplier (skew)
 
 
 class TokenEnv(Environment):
-    def __init__(self, vocab: int = 256, ep_len: int = 32, ctx_len: int = 64):
+    """``heavy_frac``/``heavy_scale`` configure the long-tail-skew
+    workload: each episode draws a persistent cost multiplier —
+    ``heavy_scale`` with probability ``heavy_frac``, else 1 — mimicking
+    a serving mix where a fraction of requests run a far larger model /
+    longer generation.  The draw comes from a ``fold_in`` of the episode
+    init key, so the default config (``heavy_frac=0``) consumes no
+    extra randomness and all engines see identical skew assignments."""
+
+    def __init__(self, vocab: int = 256, ep_len: int = 32, ctx_len: int = 64,
+                 heavy_frac: float = 0.0, heavy_scale: int = 8):
         self.vocab = vocab
         self.ep_len = ep_len
         self.ctx_len = ctx_len
+        self.heavy_frac = float(heavy_frac)
+        self.heavy_scale = int(heavy_scale)
+        base_max = 1 + ep_len // 8
         self.spec = EnvSpec(
             name="TokenEnv-copy-v0",
             obs_spec=ArraySpec((ctx_len,), jnp.int32, 0, vocab - 1),
             act_spec=ArraySpec((), jnp.int32, 0, vocab - 1),
             max_episode_steps=ep_len,
             min_cost=1,
-            max_cost=1 + ep_len // 8,
+            max_cost=base_max * (self.heavy_scale if heavy_frac > 0 else 1),
         )
 
     def init_state(self, key: jax.Array) -> TokenEnvState:
         rng, sub = jax.random.split(key)
         target = jax.random.randint(sub, (self.ep_len,), 0, self.vocab, jnp.int32)
+        heavy = jax.random.uniform(jax.random.fold_in(key, 7)) < self.heavy_frac
         z = jnp.float32(0.0)
         return TokenEnvState(
             target=target,
@@ -54,6 +68,7 @@ class TokenEnv(Environment):
             rng=rng,
             ep_return=z,
             reward_acc=z,
+            cost_scale=jnp.where(heavy, self.heavy_scale, 1).astype(jnp.int32),
         )
 
     def substep(self, s: TokenEnvState, action) -> TokenEnvState:
@@ -69,8 +84,9 @@ class TokenEnv(Environment):
         return s.replace(emitted=emitted, reward_acc=s.reward_acc + reward)
 
     def step_cost(self, s: TokenEnvState, action) -> jnp.ndarray:
-        # decode cost grows with sequence position (KV-cache length)
-        return jnp.int32(1) + s.t // 8
+        # decode cost grows with sequence position (KV-cache length),
+        # scaled by the episode's skew multiplier
+        return (jnp.int32(1) + s.t // 8) * s.cost_scale
 
     def terminal(self, s: TokenEnvState) -> jnp.ndarray:
         return s.t >= self.ep_len

@@ -1,0 +1,27 @@
+"""Picklable raising-env factory for the SubprocessEnv worker
+exception-propagation test (spawn workers re-import this module by
+name, so it must live at module scope, not inside a test)."""
+
+import numpy as np
+
+from repro.core.host_pool import HostEnv
+
+
+class RaisingEnv(HostEnv):
+    """Resets fine; every step raises."""
+
+    def __init__(self):
+        from repro.envs.classic import CartPole
+
+        self.spec = CartPole().spec
+
+    def reset(self) -> np.ndarray:
+        return np.zeros(self.spec.obs_spec.shape, np.float32)
+
+    def step(self, action):
+        raise ValueError("boom in worker")
+
+
+class RaisingFactory:
+    def __call__(self, i: int) -> RaisingEnv:
+        return RaisingEnv()

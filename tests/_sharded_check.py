@@ -90,6 +90,41 @@ def main() -> dict:
         res["divisibility_raises"] = False
     except ValueError:
         res["divisibility_raises"] = True
+
+    # 5) hierarchical schedule on the skew workload: deterministic at
+    #    every mesh size in {1, 2, D}, batches stay M unique global ids,
+    #    and no lane starves once the initial READY drain is consumed
+    #    (the overdue band's guarantee — pure sjf would fail this)
+    def hier_rollout(shards: int, steps: int = 24):
+        pool = make("TokenSkew-v0", num_envs=16, batch_size=8,
+                    engine="device-sharded", num_shards=shards,
+                    schedule="hierarchical")
+        ps, ts = pool.reset(jax.random.PRNGKey(5))
+        step = jax.jit(pool.step)
+        ids_all, rews = [], []
+        served_late: set[int] = set()
+        uniq = True
+        for t in range(steps):
+            ids = np.asarray(ts.env_id)
+            uniq &= len(set(ids.tolist())) == 8
+            if t >= 2:  # past the init drain: scheduling, not reset, serves
+                served_late.update(ids.tolist())
+            a = ((ts.env_id * 7 + t) % 256).astype(jnp.int32)
+            ps, ts = step(ps, a, ts.env_id)
+            ids_all.append(ids)
+            rews.append(np.asarray(ts.reward))
+        return np.stack(ids_all), np.stack(rews), uniq, served_late
+
+    det = uniq_ok = no_starve = True
+    for d in sorted({1, 2, D}):
+        i1, r1, u1, s1 = hier_rollout(d)
+        i2, r2, u2, s2 = hier_rollout(d)
+        det &= np.array_equal(i1, i2) and np.array_equal(r1, r2)
+        uniq_ok &= u1 and u2
+        no_starve &= s1 == set(range(16))
+    res["hier_deterministic"] = bool(det)
+    res["hier_unique_ids"] = bool(uniq_ok)
+    res["hier_no_starvation"] = bool(no_starve)
     return res
 
 

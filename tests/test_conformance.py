@@ -7,6 +7,8 @@ never hit auto-reset and rewards depend only on (init key, actions) —
 which ``make()`` aligns across engines via shared per-env init keys.
 """
 
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -115,6 +117,133 @@ def test_async_serves_everyone_once_before_twice(engine):
 def test_make_rejects_unknown_engine():
     with pytest.raises(ValueError):
         make(TASK, num_envs=4, engine="gpu-cluster")
+
+
+def test_make_rejects_bad_schedules():
+    with pytest.raises(ValueError):
+        make(TASK, num_envs=4, schedule="random")
+    with pytest.raises(ValueError):
+        # hierarchical is the cross-shard policy
+        make(TASK, num_envs=4, batch_size=2, engine="device",
+             schedule="hierarchical")
+    with pytest.raises(ValueError):
+        # sync baselines have no selection freedom
+        make(TASK, num_envs=4, engine="forloop", schedule="sjf")
+    with pytest.raises(ValueError):
+        # hierarchical has no host mirror (single queue = single shard)
+        make(TASK, num_envs=4, batch_size=2, engine="thread",
+             schedule="hierarchical")
+
+
+# --------------------------------------------------------------------- #
+# schedule="fifo" must be bitwise-identical to the PRE-refactor engines:
+# golden streams captured before the scheduler extraction (PR 3) by
+# tests/_golden_gen.py — regenerating them just blesses new behavior, so
+# don't, unless the conformance contract itself is deliberately moved.
+# --------------------------------------------------------------------- #
+GOLDEN = np.load(
+    os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                 "golden_fifo_streams.npz")
+)
+G_STEPS = 12
+
+
+def golden_device_stream(engine, n, m, **kw):
+    pool = make(TASK, num_envs=n, batch_size=m, engine=engine, seed=SEED, **kw)
+    ps, ts = pool.reset(jax.random.PRNGKey(SEED))
+    step = jax.jit(pool.step)
+    recs = []
+    for t in range(G_STEPS):
+        ids = np.asarray(ts.env_id)
+        ps, ts = step(ps, jnp.asarray(policy(ids, t)), ts.env_id)
+        recs.append((np.asarray(ts.env_id), np.asarray(ts.reward),
+                     np.asarray(ts.done), np.asarray(ts.obs)))
+    return [np.stack(x) for x in zip(*recs)]
+
+
+@pytest.mark.parametrize("tag,engine,n,m,kw", [
+    ("device_sync", "device", 8, None, {}),
+    ("device_async", "device", 8, 4, {}),
+    ("masked", "device-masked", 8, 4, {}),
+    ("sharded_async", "device-sharded", 8, 4, {"num_shards": 1}),
+])
+def test_fifo_bitwise_matches_pre_refactor_golden(tag, engine, n, m, kw):
+    ids, rew, done, obs = golden_device_stream(engine, n, m, **kw)
+    np.testing.assert_array_equal(ids, GOLDEN[f"{tag}_ids"])
+    np.testing.assert_array_equal(rew, GOLDEN[f"{tag}_rew"])
+    np.testing.assert_array_equal(done, GOLDEN[f"{tag}_done"])
+    np.testing.assert_array_equal(obs, GOLDEN[f"{tag}_obs"])
+
+
+def test_fifo_thread_matches_pre_refactor_golden():
+    """Thread engine (M == N, batches env-id-sorted: block composition
+    is timing-dependent, per-env streams are not)."""
+    pool = make(TASK, num_envs=8, engine="thread", seed=SEED, num_threads=2)
+    try:
+        pool.async_reset()
+        out = pool.recv()
+        for t in range(G_STEPS):
+            ids = np.asarray(out["env_id"])
+            out = pool.step(policy(ids, t), ids)
+            o = np.argsort(np.asarray(out["env_id"]))
+            np.testing.assert_array_equal(
+                np.asarray(out["env_id"])[o], GOLDEN["thread_ids"][t])
+            np.testing.assert_array_equal(
+                np.asarray(out["reward"])[o], GOLDEN["thread_rew"][t])
+            np.testing.assert_array_equal(
+                np.asarray(out["done"])[o], GOLDEN["thread_done"][t])
+    finally:
+        pool.close()
+
+
+# --------------------------------------------------------------------- #
+# non-default schedules: serving order changes, trajectories don't
+# --------------------------------------------------------------------- #
+def test_sjf_schedule_serves_cost_homogeneous_blocks():
+    """On the skew workload sjf must keep serving valid unique batches
+    and (unlike fifo) keep heavy lanes out of cheap blocks while cheap
+    work exists."""
+    pool = make("TokenSkew-v0", num_envs=8, batch_size=4, engine="device",
+                seed=SEED, schedule="sjf")
+    ps, ts = pool.reset(jax.random.PRNGKey(SEED))
+    step = jax.jit(pool.step)
+    for t in range(10):
+        ids = np.asarray(ts.env_id)
+        assert len(set(ids.tolist())) == 4, ids
+        ps, ts = step(ps, jnp.asarray(policy(ids, t)), ts.env_id)
+
+
+def test_schedule_does_not_change_per_env_trajectories():
+    """The policy only reorders service: per-env (reward, done) streams
+    under sjf must equal the fifo streams, serve-for-serve."""
+
+    def run(schedule):
+        pool = make("TokenSkew-v0", num_envs=8, batch_size=4,
+                    engine="device", seed=SEED, schedule=schedule)
+        ps, ts = pool.reset(jax.random.PRNGKey(SEED))
+        step = jax.jit(pool.step)
+        counts = np.zeros(8, int)
+        streams: dict[int, list] = {i: [] for i in range(8)}
+        for _ in range(16):
+            ids = np.asarray(ts.env_id)
+            rew = np.asarray(ts.reward)
+            for j, e in enumerate(ids):
+                streams[int(e)].append(rew[j])
+            a = jnp.asarray((counts[ids] * 7 + ids) % VOCAB, jnp.int32)
+            counts[ids] += 1
+            ps, ts = step(ps, a, ts.env_id)
+        return streams
+
+    sf, ss = run("fifo"), run("sjf")
+    compared = 0
+    for e in range(8):
+        n = min(len(sf[e]), len(ss[e]))
+        compared += n
+        np.testing.assert_array_equal(
+            np.asarray(sf[e][:n]), np.asarray(ss[e][:n]),
+            err_msg=f"env {e} trajectory diverges across schedules",
+        )
+    assert compared > 0
 
 
 # --------------------------------------------------------------------- #

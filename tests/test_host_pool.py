@@ -1,4 +1,7 @@
-"""Host engines: thread pool semantics, for-loop equivalence."""
+"""Host engines: thread pool semantics, for-loop equivalence, worker
+error propagation, scheduling mirror."""
+
+import time
 
 import numpy as np
 import pytest
@@ -59,6 +62,82 @@ def test_forloop_matches_device_sync_semantics():
     out = fl.step(np.ones(4, dtype=np.int64))
     assert out["obs"].shape == (4, 4)
     assert out["reward"].tolist() == [1.0] * 4
+
+
+def test_thread_worker_exception_propagates_fast():
+    """A worker exception must surface on the next recv (with the
+    traceback), not hang until the 60 s block timeout; later recvs
+    re-raise (terminal error state); close() still works."""
+    from repro.core.host_pool import HostEnv, ThreadEnvPool
+    from repro.envs.classic import CartPole
+
+    spec = CartPole().spec
+
+    class Bomb(HostEnv):
+        def __init__(self):
+            self.spec = spec
+
+        def reset(self):
+            return np.zeros(spec.obs_spec.shape, np.float32)
+
+        def step(self, action):
+            raise ValueError("thread boom")
+
+    pool = ThreadEnvPool([Bomb, Bomb], batch_size=2, num_threads=1)
+    try:
+        pool.async_reset()
+        out = pool.recv()
+        pool.send(np.zeros(2, np.int64), out["env_id"])
+        t0 = time.monotonic()
+        with pytest.raises(RuntimeError, match="thread boom"):
+            pool.recv()
+        assert time.monotonic() - t0 < 10.0  # fail fast, not 60 s
+        with pytest.raises(RuntimeError, match="thread boom"):
+            pool.recv()
+    finally:
+        pool.close()
+
+
+def test_thread_sjf_schedule_orders_queue_by_cost():
+    """The numpy scheduler mirror: with schedule='sjf' and one worker,
+    work executes (and the block fills) in last-observed-cost order."""
+    pool = repro.make("TokenSkew-v0", engine="thread", num_envs=4,
+                      num_threads=1, schedule="sjf")
+    try:
+        pool.async_reset()
+        out = pool.recv()
+        ids = np.asarray(out["env_id"])
+        out = pool.step(np.zeros(4, np.int32), ids)  # costs materialize
+        cost_by_env = np.ones(4)
+        cost_by_env[out["env_id"]] = np.maximum(out["step_cost"], 1)
+        ids2 = np.asarray(out["env_id"])
+        out = pool.step(np.zeros(4, np.int32), ids2)
+        expected = ids2[np.argsort(cost_by_env[ids2], kind="stable")]
+        np.testing.assert_array_equal(out["env_id"], expected)
+    finally:
+        pool.close()
+
+
+def test_subprocess_worker_exception_propagates_and_close_idempotent():
+    """SubprocessEnv: a worker env exception ships its traceback back to
+    the caller (instead of hanging the pipe), the error state is
+    terminal, and close() is idempotent like ThreadEnvPool.close()."""
+    import _raising_env
+
+    from repro.core.baselines import SubprocessEnv
+
+    pool = SubprocessEnv(_raising_env.RaisingFactory(), num_envs=2,
+                         num_workers=1)
+    try:
+        out = pool.reset()
+        assert out["obs"].shape == (2, 4)
+        with pytest.raises(RuntimeError, match="boom in worker"):
+            pool.step(np.zeros(2, np.int64))
+        with pytest.raises(RuntimeError, match="boom in worker"):
+            pool.reset()  # terminal error state
+    finally:
+        pool.close()
+        pool.close()  # idempotent
 
 
 def test_episode_stats_flow_through_info():

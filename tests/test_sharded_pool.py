@@ -122,3 +122,8 @@ def test_multi_shard_invariance_subprocess():
     assert res["scan_shape_ok"] and res["scan_finite"], res
     assert res["async_unique_ids"], res
     assert res["divisibility_raises"], res
+    # hierarchical scheduler: mesh-size-deterministic at mesh∈{1,2,4},
+    # unique batches, overdue band prevents starvation
+    assert res["hier_deterministic"], res
+    assert res["hier_unique_ids"], res
+    assert res["hier_no_starvation"], res
