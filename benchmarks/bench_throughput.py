@@ -24,6 +24,15 @@ fifo vs sjf vs hierarchical) on the long-tail-skew workload
 on the sharded engine at ``--mesh`` shards (default 4), writing the
 ``BENCH_schedule.json`` artifact; ``--min-schedule-ratio`` gates CI on
 best(sjf, hierarchical)/fifo FPS.
+
+``--transforms`` A/Bs the in-engine transform pipeline
+(``core/transforms.py``, fused into the jitted recv) against the
+classic python-wrapper placement (raw pool + the numpy mirror applied
+host-side each step) on ``PongStack-v5`` — the EnvPool §3.4 claim that
+preprocessing belongs inside the engine.  Both sides run the identical
+step loop and materialize the final observations on the host; only the
+transform placement differs.  Writes ``BENCH_transforms.json``;
+``--min-transform-ratio`` gates CI on in-engine/wrapper FPS.
 """
 
 from __future__ import annotations
@@ -232,6 +241,86 @@ def run_schedule(mesh: int, task: str = "TokenSkew-v0",
     return rows, summary
 
 
+def bench_transform_placement(task: str, num_envs: int, steps: int,
+                              iters: int, wrapper: bool) -> float:
+    """FPS of one preprocessing placement: ``wrapper=False`` runs the
+    task's preset pipeline in-engine (fused into the jitted recv);
+    ``wrapper=True`` runs the raw pool and applies the IDENTICAL
+    pipeline host-side through the numpy mirror after every step (the
+    gym-style wrapper placement the paper argues against)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.registry import default_transforms, make
+    from repro.core.transforms import TransformPipeline
+
+    if wrapper:
+        pool = make(task, num_envs=num_envs, transforms=[])
+        pipe = TransformPipeline(default_transforms(task), pool.spec)
+        tf_state = pipe.np_init(num_envs)
+    else:
+        pool = make(task, num_envs=num_envs)
+    step = jax.jit(pool.step)
+    rng = np.random.default_rng(0)
+    act_spec = pool.spec.act_spec
+
+    def run_steps(ps, ts, n_steps):
+        frames = 0.0
+        tf = tf_state if wrapper else None
+        for _ in range(n_steps):
+            a = jnp.asarray(act_spec.sample(rng, (num_envs,)))
+            ps, ts = step(ps, a, ts.env_id)
+            # both placements deliver the transformed batch to the host
+            # (the consumer's view); only where the transform runs moves
+            out = {
+                "obs": np.asarray(ts.obs),
+                "reward": np.asarray(ts.reward),
+                "done": np.asarray(ts.done),
+                "terminated": np.asarray(ts.terminated),
+                "env_id": np.asarray(ts.env_id),
+            }
+            if wrapper:
+                tf, out = pipe.np_apply(tf, out)
+            frames += float(np.sum(np.asarray(ts.step_cost)))
+        return ps, ts, frames
+
+    ps, ts = pool.reset(jax.random.PRNGKey(0))
+    ps, ts, _ = run_steps(ps, ts, 2)          # warmup / compile
+    t0 = time.time()
+    frames = 0.0
+    for _ in range(iters):
+        ps, ts, f = run_steps(ps, ts, steps)
+        frames += f
+    return frames / (time.time() - t0)
+
+
+def run_transforms(task: str = "PongStack-v5", num_envs: int = 32,
+                   steps: int = 30, iters: int = 3
+                   ) -> tuple[list[str], dict]:
+    """In-engine vs python-wrapper preprocessing A/B (see --transforms)."""
+    fps_wrap = bench_transform_placement(task, num_envs, steps, iters,
+                                         wrapper=True)
+    fps_eng = bench_transform_placement(task, num_envs, steps, iters,
+                                        wrapper=False)
+    ratio = fps_eng / max(fps_wrap, 1e-9)
+    unit = fps_unit(task)
+    rows = [
+        f"transforms_{task}_wrapper_N{num_envs},"
+        f"{1e6/max(fps_wrap,1e-9):.3f},{fps_wrap:.0f} {unit}/s",
+        f"transforms_{task}_inengine_N{num_envs},"
+        f"{1e6/max(fps_eng,1e-9):.3f},{fps_eng:.0f} {unit}/s",
+        f"transforms_{task}_RATIO,{ratio:.3f},in-engine/wrapper FPS",
+    ]
+    summary = {
+        "task": task,
+        "num_envs": num_envs,
+        "wrapper_fps": fps_wrap,
+        "inengine_fps": fps_eng,
+        "ratio": ratio,
+    }
+    return rows, summary
+
+
 def run_ab(task: str = "Ant-v3", num_envs: int = 64, steps: int = 40,
            iters: int = 3) -> tuple[list[str], dict]:
     """Batched-native vs forced-vmap A/B on the same sync pool — the
@@ -296,6 +385,12 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--min-schedule-ratio", type=float, default=0.0,
                     help="fail (exit 1) if best(sjf,hierarchical)/fifo FPS "
                          "drops below this (CI gate)")
+    ap.add_argument("--transforms", action="store_true",
+                    help="in-engine transform pipeline vs python-wrapper "
+                         "A/B on PongStack-v5; writes BENCH_transforms.json")
+    ap.add_argument("--min-transform-ratio", type=float, default=0.0,
+                    help="fail (exit 1) if in-engine/wrapper FPS drops "
+                         "below this (CI gate)")
     ap.add_argument("--task", default="TokenCopy-v0")
     ap.add_argument("--envs-per-shard", type=int, default=16)
     ap.add_argument("--num-envs", type=int, default=64)
@@ -339,6 +434,18 @@ def main(argv: list[str] | None = None) -> int:
         rows = run_mesh(args.mesh, args.task, args.envs_per_shard,
                         args.steps, args.iters)
         extra = {"mode": "mesh", "mesh": args.mesh}
+    elif args.transforms:
+        if args.smoke:
+            # N=64 so the placement gap (numpy wrapper copies scale
+            # with N, the fused XLA path amortizes) dominates 2-core
+            # timer noise; at N=16 the ratio flirts with the 1.0 gate
+            args.num_envs, args.steps, args.iters = 64, 20, 2
+        task = args.task if args.task != "TokenCopy-v0" else "PongStack-v5"
+        rows, summary = run_transforms(task, args.num_envs, args.steps,
+                                       args.iters)
+        extra = {"mode": "transforms", "transforms": summary}
+        if args.json is None:
+            args.json = os.path.join(ROOT, "BENCH_transforms.json")
     elif args.ab:
         if args.smoke:
             args.num_envs, args.steps, args.iters = 32, 10, 1
@@ -368,6 +475,14 @@ def main(argv: list[str] | None = None) -> int:
             return 1
         print(f"[bench] {best}/fifo ratio {ratio:.3f} >= "
               f"{args.min_schedule_ratio} OK")
+    if extra.get("mode") == "transforms" and args.min_transform_ratio > 0:
+        ratio = extra["transforms"]["ratio"]
+        if ratio < args.min_transform_ratio:
+            print(f"[bench] FAIL: in-engine/wrapper ratio {ratio:.3f} < "
+                  f"{args.min_transform_ratio}")
+            return 1
+        print(f"[bench] in-engine/wrapper ratio {ratio:.3f} >= "
+              f"{args.min_transform_ratio} OK")
     return 0
 
 

@@ -1,19 +1,24 @@
 """End-to-end PPO on the Atari-like env (paper §4.2 / Figure 6).
 
+The pool comes from ``repro.make`` with the in-engine transform
+pipeline: the env emits raw 84x84 frames and the engine fuses the
+classic DQN preprocessing (``FrameStack(4)`` + ``RewardClip``) into its
+jitted recv (``core/transforms.py``), so PPO trains on the stacked,
+clipped stream with zero Python wrappers — the EnvPool §3.4 placement.
+
 Default settings mirror the paper's CleanRL Atari config (Table 3, N=8);
 ``--tuned`` switches to the high-throughput Figure-6 settings (N=64,
 larger batch, fewer epochs) that trade sample efficiency for wall-clock.
 
     PYTHONPATH=src python examples/ppo_atari.py --total-steps 100000
+    PYTHONPATH=src python examples/ppo_atari.py --no-reward-clip  # raw rewards
 """
 
 import argparse
 import json
 
-import jax
-
-from repro.core.device_pool import DeviceEnvPool
-from repro.core.registry import _jax_env
+import repro
+from repro.core.transforms import FrameStack, RewardClip
 from repro.rl.ppo import PPOConfig, train_device
 
 
@@ -25,24 +30,35 @@ def main() -> None:
     ap.add_argument("--batch-size", type=int, default=None)
     ap.add_argument("--tuned", action="store_true",
                     help="paper Fig.6 high-throughput settings (N=64)")
+    ap.add_argument("--frame-stack", type=int, default=4)
+    ap.add_argument("--num-steps", type=int, default=128,
+                    help="rollout length per iteration (smaller = faster "
+                         "smoke runs on CPU)")
+    ap.add_argument("--no-reward-clip", action="store_true",
+                    help="train on raw (unclipped) rewards")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out-json", default=None)
     args = ap.parse_args()
 
     if args.tuned:
         num_envs, batch = 64, 64
-        cfg = PPOConfig(total_steps=args.total_steps, num_steps=128,
+        cfg = PPOConfig(total_steps=args.total_steps,
+                        num_steps=args.num_steps,
                         minibatches=4, epochs=2, lr=8e-4, ent_coef=0.01,
                         vf_clip=False)
     else:
         num_envs = args.num_envs
         batch = args.batch_size or num_envs
-        cfg = PPOConfig(total_steps=args.total_steps, num_steps=128,
+        cfg = PPOConfig(total_steps=args.total_steps,
+                        num_steps=args.num_steps,
                         minibatches=4, epochs=4, lr=2.5e-4)
 
-    env = _jax_env(args.task)
-    mode = "sync" if batch == num_envs else "async"
-    pool = DeviceEnvPool(env, num_envs, batch, mode=mode)
+    # the in-engine preprocessing preset: stack + clip, fused into recv
+    transforms = [FrameStack(args.frame_stack)]
+    if not args.no_reward_clip:
+        transforms.append(RewardClip())
+    pool = repro.make(args.task, num_envs=num_envs, batch_size=batch,
+                      engine="device", transforms=transforms)
 
     def log(rec):
         print(json.dumps({k: (round(v, 3) if isinstance(v, float) else v)

@@ -9,9 +9,22 @@ import numpy as np
 import repro
 
 # ---- synchronous mode (paper A.1): gym-style -------------------------- #
+# Pong-v5's default in-engine pipeline is FrameStack(4): the env emits
+# raw 84x84 frames and the engine stacks them inside its jitted recv
+# (paper §3.4 — preprocessing lives in the engine, not Python wrappers)
 env = repro.make("Pong-v5", num_envs=16)          # device pool, sync
 ps, ts = env.reset(jax.random.PRNGKey(0))
 print("reset obs:", jax.tree.leaves(ts.obs)[0].shape)   # (16, 4, 84, 84)
+
+# explicit pipelines: make(..., transforms=[...]) — e.g. the DQN stack
+# with reward clipping and float pixels; transforms=[] gives raw frames
+tf_env = repro.make(
+    "Pong-v5", num_envs=4,
+    transforms=[repro.FrameStack(4), repro.RewardClip(),
+                repro.ObsCast(np.float32, scale=1 / 255)],
+)
+print("transformed spec:", tf_env.spec.obs_spec.shape,
+      tf_env.spec.obs_spec.dtype)
 
 act = np.zeros(16, dtype=np.int32)
 ps, ts = env.step(ps, act, ts.env_id)

@@ -28,5 +28,19 @@ if [ -z "${CI_SKIP_BENCH:-}" ]; then
     # margin absorbs CI timer noise).  Writes BENCH_schedule.json.
     python benchmarks/bench_throughput.py --schedule --smoke \
         --min-schedule-ratio 1.15
+
+    echo "== transform-pipeline conformance (device/sharded mesh 1,2,4/thread) =="
+    # the in-engine pipeline's engine-conformance + golden-pin tests
+    # (also part of tier-1 above; re-run standalone so a bench-only CI
+    # invocation still exercises them)
+    python -m pytest -q tests/test_transforms.py
+
+    echo "== in-engine vs python-wrapper preprocessing A/B (PongStack-v5) =="
+    # EnvPool §3.4: preprocessing inside the engine must not lose to the
+    # gym-style wrapper placement (typical 3-4x in-engine at the smoke's
+    # N=64 on this 2-core CI; the 1.0 floor is the regression gate).
+    # Writes BENCH_transforms.json.
+    python benchmarks/bench_throughput.py --transforms --smoke \
+        --min-transform-ratio 1.0
 fi
 echo "CI OK"

@@ -14,6 +14,9 @@ _CORE_EXPORTS = (
     "make", "make_py", "DmEnv", "EnvPool", "FunctionalEnvPool", "bind",
     "is_functional", "to_timestep", "build_collect_fn",
     "build_random_collect_fn", "collect_init", "list_engines", "list_envs",
+    # in-engine transform pipeline (core/transforms.py)
+    "Transform", "TransformPipeline", "FrameStack", "RewardClip",
+    "ObsCast", "NormalizeObs", "EpisodicLife",
 )
 
 

@@ -33,6 +33,15 @@ from repro.core.registry import (
 )
 from repro.core.sharded_pool import ShardedDeviceEnvPool, make_env_mesh
 from repro.core.specs import ArraySpec, EnvSpec, TimeStep
+from repro.core.transforms import (
+    EpisodicLife,
+    FrameStack,
+    NormalizeObs,
+    ObsCast,
+    RewardClip,
+    Transform,
+    TransformPipeline,
+)
 from repro.core.dm_api import DmEnv
 from repro.core.xla_loop import build_collect_fn, build_random_collect_fn, collect_init
 
@@ -43,8 +52,15 @@ __all__ = [
     "DmEnv",
     "EnvPool",
     "EnvSpec",
+    "EpisodicLife",
+    "FrameStack",
     "FunctionalEnvPool",
+    "NormalizeObs",
+    "ObsCast",
     "PoolState",
+    "RewardClip",
+    "Transform",
+    "TransformPipeline",
     "ShardedDeviceEnvPool",
     "TimeStep",
     "bind",

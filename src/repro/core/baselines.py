@@ -24,6 +24,7 @@ from typing import Callable
 import numpy as np
 
 from repro.core.host_pool import HostEnv
+from repro.core.transforms import TransformPipeline
 
 
 def _result_dict(n, obs_spec):
@@ -74,21 +75,30 @@ class _SyncSendRecv:
 class ForLoopEnv(_SyncSendRecv):
     """Paper Table 1 row 1: single-thread sequential stepping."""
 
-    def __init__(self, env_fns: list[Callable[[], HostEnv]]):
+    def __init__(self, env_fns: list[Callable[[], HostEnv]],
+                 transforms=()):
         self._envs = [fn() for fn in env_fns]
         self.num_envs = len(self._envs)
         self.batch_size = self.num_envs
-        self.spec = self._envs[0].spec
+        # same transform pipeline as every other engine (numpy mirror),
+        # applied to each assembled M == N block
+        self._pipeline = TransformPipeline(transforms, self._envs[0].spec)
+        self._tf_state = self._pipeline.np_init(self.num_envs)
+        self.raw_spec = self._envs[0].spec
+        self.spec = self._pipeline.out_spec
         self._pending = None
 
     def reset(self) -> dict[str, np.ndarray]:
-        out = _result_dict(self.num_envs, self.spec.obs_spec)
+        # pipeline state restarts with the envs (device init() parity)
+        self._tf_state = self._pipeline.np_init(self.num_envs)
+        out = _result_dict(self.num_envs, self.raw_spec.obs_spec)
         for i, e in enumerate(self._envs):
             out["obs"][i] = e.reset()
+        self._tf_state, out = self._pipeline.np_apply(self._tf_state, out)
         return out
 
     def step(self, actions, env_ids=None) -> dict[str, np.ndarray]:
-        out = _result_dict(self.num_envs, self.spec.obs_spec)
+        out = _result_dict(self.num_envs, self.raw_spec.obs_spec)
         for i, e in enumerate(self._envs):
             obs, rew, done, info = e.step(actions[i])
             out["obs"][i] = obs
@@ -99,6 +109,7 @@ class ForLoopEnv(_SyncSendRecv):
             out["episode_return"][i] = info.get("episode_return", 0.0)
             out["episode_length"][i] = info.get("episode_length", 0)
             out["step_cost"][i] = info.get("step_cost", 1)
+        self._tf_state, out = self._pipeline.np_apply(self._tf_state, out)
         return out
 
     def close(self) -> None:
@@ -148,6 +159,7 @@ class SubprocessEnv(_SyncSendRecv):
         num_envs: int,
         num_workers: int | None = None,
         spec=None,
+        transforms=(),
     ):
         self.num_envs = num_envs
         self.batch_size = num_envs
@@ -155,7 +167,14 @@ class SubprocessEnv(_SyncSendRecv):
             probe = env_factory(0)
             spec = probe.spec
             del probe
-        self.spec = spec
+        # workers step raw envs and write raw obs into shared memory;
+        # the parent applies the shared transform pipeline (numpy
+        # mirror) to each assembled block, so pipeline state stays
+        # centralized and identical to every other engine's
+        self._pipeline = TransformPipeline(transforms, spec)
+        self._tf_state = self._pipeline.np_init(num_envs)
+        self.raw_spec = spec
+        self.spec = self._pipeline.out_spec
 
         ctx = mp.get_context("spawn")  # fork is unsafe with an XLA runtime
         self.num_workers = min(num_workers or num_envs, num_envs)
@@ -215,12 +234,15 @@ class SubprocessEnv(_SyncSendRecv):
     def reset(self) -> dict[str, np.ndarray]:
         if self._error is not None:
             self._raise_worker_error()
+        # pipeline state restarts with the envs (device init() parity)
+        self._tf_state = self._pipeline.np_init(self.num_envs)
         for c in self._conns:
             c.send(("reset", None))
         for c in self._conns:
             self._recv_checked(c)
-        out = _result_dict(self.num_envs, self.spec.obs_spec)
+        out = _result_dict(self.num_envs, self.raw_spec.obs_spec)
         out["obs"][:] = self._obs  # batching copy (the paper counts this)
+        self._tf_state, out = self._pipeline.np_apply(self._tf_state, out)
         return out
 
     def step(self, actions, env_ids=None) -> dict[str, np.ndarray]:
@@ -228,12 +250,13 @@ class SubprocessEnv(_SyncSendRecv):
             self._raise_worker_error()
         for c, (lo, hi) in zip(self._conns, self._bounds):
             c.send(("step", actions[lo:hi]))
-        out = _result_dict(self.num_envs, self.spec.obs_spec)
+        out = _result_dict(self.num_envs, self.raw_spec.obs_spec)
         for c, (lo, hi) in zip(self._conns, self._bounds):
             rews, dones = self._recv_checked(c)
             out["reward"][lo:hi] = rews
             out["done"][lo:hi] = dones
         out["obs"][:] = self._obs
+        self._tf_state, out = self._pipeline.np_apply(self._tf_state, out)
         return out
 
     def close(self) -> None:

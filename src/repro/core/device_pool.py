@@ -20,6 +20,11 @@ Execution is batched-native (envs/batch.py): every recv drives ONE fused
 multi-substep call over the selected block — the Pallas ``env_step``
 kernel for envs that provide it, the bitwise-equal masked-loop vmap
 adapter otherwise — never per-lane ``env.step`` loops under vmap.
+The in-engine transform pipeline (``core/transforms.py``, selected by
+``transforms=[...]``) runs over the same served block inside the jitted
+recv: stacking/clipping/normalization lower into the same XLA program
+as the step itself (EnvPool's in-engine preprocessing, paper §3.4);
+transform state lives on ``PoolState`` alongside the scheduler signals.
 
 Three execution modes:
   * ``sync``   — step all N each recv (gym.vector semantics, M = N).
@@ -52,6 +57,7 @@ from repro.core.scheduler import (
     get_scheduler,
 )
 from repro.core.specs import EnvSpec, TimeStep
+from repro.core.transforms import TransformPipeline
 from repro.envs.base import Environment
 from repro.envs.batch import as_batch_env
 from repro.utils.pytree import pytree_dataclass, tree_gather
@@ -84,6 +90,12 @@ class PoolState:
     r_cost: jnp.ndarray
     tick: jnp.ndarray          # int32 global recv counter
     rng: jax.Array
+    # transform-pipeline state (core/transforms.py): one entry per
+    # transform; per-lane leaves carry the leading N dim, global leaves
+    # (e.g. NormalizeObs moments) are fixed-size.  Empty tuple when the
+    # pool has no transforms — zero pytree leaves, so the classic
+    # engine behavior (and its goldens) is bitwise-unchanged.
+    tf_state: Any = ()
 
 
 class DeviceEnvPool:
@@ -101,6 +113,9 @@ class DeviceEnvPool:
         aging: float = 1.0,
         batched: bool | None = None,
         schedule: str | Scheduler = "fifo",
+        sched_patience: float = 1.0,
+        transforms: Any = (),
+        tf_axis: str | None = None,
     ):
         if batch_size is None:
             batch_size = num_envs
@@ -112,10 +127,21 @@ class DeviceEnvPool:
             raise ValueError("sync mode requires batch_size == num_envs")
         # selection policy (core/scheduler.py): which M lanes each recv
         # serves.  ``aging`` parameterizes the fifo policy's starvation
-        # guard; an explicit Scheduler instance wins over both knobs
+        # guard, ``sched_patience`` the hierarchical policy's fairness
+        # deadline; an explicit Scheduler instance wins over all knobs
         # (the sharded pool passes the hierarchical policy this way).
-        self.scheduler = get_scheduler(schedule, aging=aging)
+        self.scheduler = get_scheduler(schedule, aging=aging,
+                                       patience=sched_patience)
         self.env = env
+        # in-engine transform pipeline (core/transforms.py): applied to
+        # every served block INSIDE the jitted recv, so preprocessing
+        # lowers into the same XLA program as the fused multi-substep.
+        # ``tf_axis`` is the mesh axis name when this pool body runs
+        # inside a shard_map (sharded engine) — NormalizeObs merges its
+        # moment sums over it.
+        self.pipeline = TransformPipeline(transforms, env.spec,
+                                          axis_name=tf_axis)
+        self.raw_spec = env.spec
         # THE hot-path engine: a batched-native view of the env.  All
         # recv/tick bodies drive batched primitives (one fused
         # multi-substep call per batch) — never per-lane ``env.step``
@@ -123,7 +149,9 @@ class DeviceEnvPool:
         # adapter (the A/B baseline); None lets the env pick its native
         # implementation (e.g. the Pallas kernel for MujocoLike).
         self.benv = as_batch_env(env, native=batched)
-        self.spec = env.spec
+        # drivers see the TRANSFORMED spec (obs shape/dtype/bounds stay
+        # truthful after stacking/casting); act_spec is never changed
+        self.spec = self.pipeline.out_spec
         self.num_envs = int(num_envs)
         self.batch_size = int(batch_size)
         self.mode = mode
@@ -162,6 +190,7 @@ class DeviceEnvPool:
             r_cost=jnp.zeros((N,), jnp.int32),
             tick=jnp.int32(0),
             rng=rng,
+            tf_state=self.pipeline.init(N),
         )
 
     # ------------------------------------------------------------------ #
@@ -171,6 +200,23 @@ class DeviceEnvPool:
         """The scheduler's lane signals, aliased onto PoolState fields."""
         return SchedState(
             phase=ps.phase, cost=ps.cost, send_tick=ps.send_tick, tick=ps.tick
+        )
+
+    def _serve(self, ps: PoolState, idx: jnp.ndarray, out: TimeStep
+               ) -> tuple[PoolState, TimeStep]:
+        """Run the transform pipeline over one served (raw) block —
+        inside the caller's jit scope, so on the device path the
+        preprocessing fuses into the same XLA program as the recv
+        itself.  Applied exactly once per served result (both recv
+        flavors serve through here); per-lane transform state rows are
+        gathered for the block and scattered back onto ``PoolState``."""
+        if not self.pipeline:
+            return ps, out
+        blk = self.pipeline.gather(ps.tf_state, idx)
+        blk, out = self.pipeline.apply(blk, out)
+        return (
+            ps.replace(tf_state=self.pipeline.scatter(ps.tf_state, idx, blk)),
+            out,
         )
 
     def send(self, ps: PoolState, actions: jnp.ndarray, env_ids: jnp.ndarray
@@ -209,22 +255,16 @@ class DeviceEnvPool:
         # whole block (per-lane data-dependent cost handled inside)
         new_states, ts = self.benv.v_step(sel_states, sel_actions, need_step)
 
-        # merge with stored results for lanes that were READY.  Their obs
-        # is re-derived from the CURRENT env state — ``v_step`` froze the
-        # state for ``do=False`` lanes but its TimeStep obs went through
-        # the (discarded) finalize pass, which is one phantom step ahead
-        # for t-dependent observations.
-        obs = jax.tree.map(
-            lambda stepped, cur: jnp.where(
-                need_step.reshape(
-                    need_step.shape + (1,) * (stepped.ndim - need_step.ndim)
-                ),
-                stepped,
-                cur,
-            ),
-            ts.obs,
-            self.benv.v_observe(sel_states),
-        )
+        # ONE observe pass over the post-step states serves every lane:
+        # for stepped lanes ``new_states`` is the finalized state (its
+        # observe is bitwise ``ts.obs``); for ``do=False`` lanes
+        # ``v_step`` restored the original state, so this re-derives the
+        # CURRENT obs — the phantom-obs fix (their discarded finalize
+        # pass is one step ahead for t-dependent observations).  Not
+        # reading ``ts.obs`` lets XLA dead-code-eliminate the finalize
+        # observe, which matters for render-on-observe envs (AtariLike):
+        # one frame render per recv instead of two.
+        obs = self.benv.v_observe(new_states)
         out = TimeStep(
             obs=obs,
             reward=jnp.where(need_step, ts.reward, ps.r_reward[idx]),
@@ -256,7 +296,10 @@ class DeviceEnvPool:
             r_cost=ps.r_cost.at[idx].set(out.step_cost),
             tick=ss.tick,
         )
-        return ps, out
+        # stored r_* results stay RAW; the pipeline runs at serve time
+        # (masked mode serves stored results through the same path, so
+        # both recv flavors emit identical transformed streams)
+        return self._serve(ps, idx, out)
 
     # ------------------------------------------------------------------ #
     # masked (event-driven tick) mode — the literal-semantics ablation
@@ -332,7 +375,7 @@ class DeviceEnvPool:
         )
         ss = self.scheduler.complete(self._sched_view(ps), idx)
         ps = ps.replace(phase=ss.phase, tick=ss.tick)
-        return ps, out
+        return self._serve(ps, idx, out)
 
     # ------------------------------------------------------------------ #
     # gym-style combined step + reset views
@@ -370,10 +413,11 @@ def make_pool(
     mode: str | None = None,
     batched: bool | None = None,
     schedule: str | Scheduler = "fifo",
+    transforms: Any = (),
 ) -> DeviceEnvPool:
     """EnvPool constructor with the paper's mode convention: sync iff
     batch_size in (None, num_envs)."""
     if mode is None:
         mode = "sync" if batch_size in (None, num_envs) else "async"
     return DeviceEnvPool(env, num_envs, batch_size, mode=mode, batched=batched,
-                         schedule=schedule)
+                         schedule=schedule, transforms=transforms)

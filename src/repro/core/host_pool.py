@@ -25,6 +25,7 @@ import numpy as np
 from repro.core.buffers import ActionBufferQueue, StateBufferQueue
 from repro.core.scheduler import SCHEDULES, numpy_priority
 from repro.core.specs import EnvSpec
+from repro.core.transforms import TransformPipeline
 
 _RESET = object()  # sentinel action: reset the env
 _STOP = object()   # sentinel work item: worker shutdown
@@ -109,6 +110,8 @@ class ThreadEnvPool:
         num_threads: int | None = None,
         schedule: str = "fifo",
         aging: float = 1.0,
+        cost_ema_alpha: float = 1.0,
+        transforms: Any = (),
     ):
         self.num_envs = len(env_fns)
         self.batch_size = batch_size or self.num_envs
@@ -126,19 +129,34 @@ class ThreadEnvPool:
         # numpy mirror of core/scheduler.py: ``send`` enqueues work in
         # policy-priority order, so workers pull (and thus finish) the
         # scheduled lanes first and recv's "first M finished" block is
-        # policy-shaped.  Cost estimates are the last observed per-env
-        # step_cost (the host-side SJF estimator); fifo keeps the
-        # caller's order — the pre-scheduler behavior, bitwise.
+        # policy-shaped.  Cost estimates feed the SJF mirror through an
+        # EMA of the observed per-env step_cost: ``cost_ema_alpha=1.0``
+        # (default) is the classic last-observed estimator, bitwise-
+        # preserved; lower alpha smooths noisy per-step costs so one
+        # cheap step doesn't erase a lane's heavy history.  fifo keeps
+        # the caller's order — the pre-scheduler behavior, bitwise.
+        if not 0.0 < cost_ema_alpha <= 1.0:
+            raise ValueError(
+                f"cost_ema_alpha must be in (0, 1], got {cost_ema_alpha}"
+            )
         self.schedule = schedule
         self.aging = float(aging)
+        self.cost_ema_alpha = float(cost_ema_alpha)
         self._est_cost = np.ones(self.num_envs, np.float32)
         self._send_tick = np.zeros(self.num_envs, np.float32)
         self._tick = 0
 
         self._envs = [fn() for fn in env_fns]
-        self.spec = self._envs[0].spec
+        # host side of the in-engine pipeline (core/transforms.py): the
+        # IDENTICAL transform list the device engines fuse into recv,
+        # applied here to each assembled result block (raw results sit
+        # in the StateBufferQueue; ``recv`` transforms the taken block).
+        self._pipeline = TransformPipeline(transforms, self._envs[0].spec)
+        self._tf_state = self._pipeline.np_init(self.num_envs)
+        self.raw_spec = self._envs[0].spec
+        self.spec = self._pipeline.out_spec
 
-        obs_spec = self.spec.obs_spec
+        obs_spec = self.raw_spec.obs_spec
         fields = {
             "obs": (obs_spec.shape, obs_spec.dtype),
             "reward": ((), np.float32),
@@ -209,6 +227,11 @@ class ThreadEnvPool:
     # ------------------------------------------------------------------ #
     def async_reset(self) -> None:
         """Enqueue a reset for every env (paper A.3: call once at start)."""
+        # every episode restarts: the transform pipeline restarts with
+        # it (matching the device family, where init() rebuilds
+        # tf_state) — without this a second reset would serve frame
+        # stacks still holding pre-reset frames
+        self._tf_state = self._pipeline.np_init(self.num_envs)
         self._actions.put_batch([(i, _RESET) for i in range(self.num_envs)])
 
     def send(self, actions: np.ndarray, env_ids: np.ndarray) -> None:
@@ -247,9 +270,15 @@ class ThreadEnvPool:
             except TimeoutError:
                 if deadline is not None and time.monotonic() >= deadline:
                     raise
-        # refresh the per-env cost estimates the sjf mirror orders by
-        self._est_cost[out["env_id"]] = np.maximum(out["step_cost"], 1)
+        # refresh the per-env cost estimates the sjf mirror orders by:
+        # EMA of observed cost (alpha=1.0 -> last-observed, bitwise the
+        # classic estimator)
+        ids = out["env_id"]
+        observed = np.maximum(out["step_cost"], 1).astype(np.float32)
+        a = self.cost_ema_alpha
+        self._est_cost[ids] = a * observed + (1.0 - a) * self._est_cost[ids]
         self._tick += 1
+        self._tf_state, out = self._pipeline.np_apply(self._tf_state, out)
         return out
 
     def step(self, actions: np.ndarray, env_ids: np.ndarray

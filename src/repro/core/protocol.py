@@ -25,10 +25,29 @@ Async engines additionally share the scheduling-policy axis
 (``core/scheduler.py``, selected by ``make(..., schedule=...)``): which
 M lanes each ``recv`` serves is a pluggable policy — ``"fifo"``
 (default, the classic engine behavior), ``"sjf"``, or
-``"hierarchical"`` (sharded) — consumed by the functional engines as
-pure ``SchedState`` primitives and by the host thread engine through
+``"hierarchical"`` (sharded; its fairness deadline is
+``make(..., sched_patience=...)``) — consumed by the functional engines
+as pure ``SchedState`` primitives and by the host thread engine through
 the numpy mirror.  The policy never changes per-env trajectories (those
 depend only on init keys and routed actions), only the serving order.
+
+Every engine also carries the in-engine transform hook
+(``core/transforms.py``, selected by ``make(..., transforms=[...])``):
+an ordered pipeline of pure per-block preprocessing stages (frame
+stacking, reward clipping, casting, normalization, episodic-life)
+applied to each served result exactly once, inside the jitted recv for
+the device family and as a numpy mirror for the host engines —
+bitwise-identical for the deterministic transforms (stack / clip /
+cast); ``NormalizeObs`` agrees only to f32 reduction-order tolerance.
+Spec-transformation rule: ``pool.spec`` is the RAW env
+spec passed through every transform's ``transform_spec`` in list order,
+so ``obs_spec`` shape/dtype/bounds (and the reward range after
+clipping) are always truthful for the stream the driver actually
+receives; ``act_spec`` is never transformed.  Transforms change only
+the served view of a trajectory — never the underlying env dynamics,
+scheduling, auto-reset points, or ``episode_return`` bookkeeping —
+so engine conformance (identical streams across engines for identical
+seeds/actions) holds for transformed streams exactly as for raw ones.
 """
 
 from __future__ import annotations

@@ -9,6 +9,10 @@
                schedule="hierarchical")                 # + scheduling policy
     env = make("Ant-v3", engine="thread", num_envs=64)  # host thread pool
     env = make("Ant-v3", engine="subprocess", ...)      # gym.vector baseline
+    env = make("Pong-v5", num_envs=100,
+               transforms=[FrameStack(4), RewardClip()])  # in-engine
+                                                          # preprocessing
+    env = make("PongStack-v5", num_envs=100)            # preset pipeline
 
 One spec-driven front-end constructs every engine:
 
@@ -35,10 +39,14 @@ from typing import Any, Callable
 import numpy as np
 
 from repro.core.device_pool import DeviceEnvPool
+from repro.core.transforms import Transform, resolve_transforms
 from repro.envs.base import Environment
 
 _REGISTRY: dict[str, Callable[..., Environment]] = {}
 _PY_REGISTRY: dict[str, Callable[..., Any]] = {}
+# per-task default transform pipeline (core/transforms.py), applied when
+# ``make(..., transforms=None)``; an explicit list (incl. []) replaces it
+_TRANSFORMS: dict[str, tuple[Transform, ...]] = {}
 _DEFAULTS_DONE = False
 
 ENGINES = (
@@ -47,8 +55,19 @@ ENGINES = (
 )
 
 
-def register(name: str, factory: Callable[..., Environment]) -> None:
+def register(name: str, factory: Callable[..., Environment],
+             transforms: tuple[Transform, ...] = ()) -> None:
+    """Register a task; ``transforms`` is its default in-engine pipeline
+    (e.g. ``Pong-v5`` ships ``FrameStack(4)`` so the classic stacked
+    ALE layout stays the out-of-the-box observation)."""
     _REGISTRY[name] = factory
+    _TRANSFORMS[name] = tuple(transforms)
+
+
+def default_transforms(task_id: str) -> tuple[Transform, ...]:
+    """The task's registered default transform pipeline."""
+    _ensure_defaults()
+    return _TRANSFORMS.get(task_id, ())
 
 
 def register_py(name: str, factory: Callable[..., Any]) -> None:
@@ -92,6 +111,9 @@ def make(
     seed: int = 0,
     batched: bool | None = None,
     schedule: str = "fifo",
+    sched_patience: float = 1.0,
+    cost_ema_alpha: float = 1.0,
+    transforms: Any = None,
     **env_kwargs: Any,
 ):
     """Create a vectorized env pool, EnvPool-style.
@@ -108,14 +130,28 @@ def make(
     host thread engine consumes the same enum through the numpy mirror;
     the synchronous baselines (forloop/subprocess, M == N by
     construction) have no selection freedom and only accept ``"fifo"``.
+    ``sched_patience`` is the hierarchical policy's fairness deadline
+    (see ``core/scheduler.py``); ``cost_ema_alpha`` smooths the thread
+    engine's observed-cost estimator (1.0 = last-observed, the classic).
+
+    ``transforms`` selects the in-engine preprocessing pipeline
+    (``core/transforms.py``) fused into every engine's recv:
+    ``None`` (default) uses the task's registered preset (e.g.
+    ``Pong-v5`` -> ``[FrameStack(4)]``), an explicit list — like
+    ``[FrameStack(4), RewardClip()]`` — replaces it, and ``[]`` gives
+    the raw env stream.  ``pool.spec`` always reflects the transformed
+    observation layout.
     """
+    _ensure_defaults()
+    tfs = resolve_transforms(transforms, _TRANSFORMS.get(task_id, ()))
     if engine in ("device", "device-masked"):
         env = _jax_env(task_id, **env_kwargs)
         mode = None if engine == "device" else "masked"
         if mode is None:
             mode = "sync" if batch_size in (None, num_envs) else "async"
         return DeviceEnvPool(env, num_envs, batch_size, mode=mode,
-                             batched=batched, schedule=schedule)
+                             batched=batched, schedule=schedule,
+                             sched_patience=sched_patience, transforms=tfs)
 
     if engine == "device-sharded":
         from repro.core.sharded_pool import ShardedDeviceEnvPool
@@ -125,6 +161,7 @@ def make(
             env, num_envs, batch_size,
             mesh=mesh if mesh is not None else num_shards,
             batched=batched, schedule=schedule,
+            sched_patience=sched_patience, transforms=tfs,
         )
 
     if engine == "thread":
@@ -139,7 +176,8 @@ def make(
             for i in range(num_envs)
         ]
         return ThreadEnvPool(fns, batch_size=batch_size,
-                             num_threads=num_threads, schedule=schedule)
+                             num_threads=num_threads, schedule=schedule,
+                             cost_ema_alpha=cost_ema_alpha, transforms=tfs)
 
     if engine in ("forloop", "subprocess") and schedule != "fifo":
         raise ValueError(
@@ -159,7 +197,7 @@ def make(
             ))
             for i in range(num_envs)
         ]
-        return ForLoopEnv(fns)
+        return ForLoopEnv(fns, transforms=tfs)
 
     if engine == "subprocess":
         from repro.core.baselines import SubprocessEnv
@@ -171,6 +209,7 @@ def make(
             num_envs,
             num_workers=num_threads,
             spec=env.spec,
+            transforms=tfs,
         )
 
     raise ValueError(f"unknown engine {engine!r}; known: {ENGINES}")
@@ -224,14 +263,28 @@ def _ensure_defaults() -> None:
         PyPendulum,
     )
 
+    from repro.core.transforms import (
+        FrameStack,
+        NormalizeObs,
+        RewardClip,
+    )
+
     register("CartPole-v1", CartPole)
     register("MountainCar-v0", MountainCar)
     register("Pendulum-v1", Pendulum)
-    register("Pong-v5", AtariLike)
-    register("AtariLike-Pong-v5", AtariLike)
+    # AtariLike emits RAW single frames; the classic stacked 4x84x84
+    # layout is the default in-engine pipeline (paper §3.4: the
+    # preprocessing runs inside the engine, not in Python wrappers)
+    register("Pong-v5", AtariLike, transforms=(FrameStack(4),))
+    register("AtariLike-Pong-v5", AtariLike, transforms=(FrameStack(4),))
     register("Ant-v3", MujocoLike)
     register("MujocoLike-Ant-v3", MujocoLike)
     register("TokenCopy-v0", TokenEnv)
+    # preset pipelines: the DQN-style Atari stack (stack + clip) and
+    # the normalized-observation MuJoCo task
+    register("PongStack-v5", AtariLike,
+             transforms=(FrameStack(4), RewardClip()))
+    register("AntNorm-v3", MujocoLike, transforms=(NormalizeObs(),))
     # long-tail-skew workloads (heterogeneous per-episode step cost —
     # the scheduling-policy benchmark; see bench_throughput --schedule)
     register(

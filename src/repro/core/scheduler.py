@@ -317,15 +317,22 @@ def get_scheduler(
     aging: float = 1.0,
     axis_name: str | None = None,
     num_shards: int | None = None,
+    patience: float = 1.0,
 ) -> Scheduler:
     """Resolve a policy name (or pass through an instance).
 
     ``hierarchical`` needs the mesh context (``axis_name``/``num_shards``
     — the sharded pool provides them); asking for it anywhere else
-    raises, as does an unknown name.
+    raises, as does an unknown name.  ``patience`` is the hierarchical
+    policy's fairness knob (deferred lane of cost c is due at ``age >=
+    patience * c``; exposed as ``make(..., sched_patience=...)``) —
+    lower is fairer, higher is greedier.  The fifo/sjf policies have no
+    deadline band, so the knob is accepted and unused there.
     """
     if isinstance(schedule, Scheduler):
         return schedule
+    if patience <= 0:
+        raise ValueError(f"patience must be > 0, got {patience}")
     if schedule == "fifo":
         return FifoScheduler(aging=aging)
     if schedule == "sjf":
@@ -336,7 +343,8 @@ def get_scheduler(
                 "schedule='hierarchical' is the cross-shard policy: it "
                 "needs a device mesh (use engine='device-sharded')"
             )
-        return HierarchicalScheduler(axis_name, num_shards, aging=aging)
+        return HierarchicalScheduler(axis_name, num_shards, aging=aging,
+                                     patience=patience)
     raise ValueError(f"unknown schedule {schedule!r}; known: {SCHEDULES}")
 
 

@@ -88,6 +88,8 @@ class ShardedDeviceEnvPool:
         aging: float = 1.0,
         batched: bool | None = None,
         schedule: str = "fifo",
+        sched_patience: float = 1.0,
+        transforms: Any = (),
     ):
         if batch_size is None:
             batch_size = num_envs
@@ -120,12 +122,22 @@ class ShardedDeviceEnvPool:
         # ``axis_name`` inside the recv shard_map; fifo/sjf stay
         # communication-free per-shard policies).
         self.scheduler = get_scheduler(
-            schedule, aging=aging, axis_name=axis_name, num_shards=d
+            schedule, aging=aging, axis_name=axis_name, num_shards=d,
+            patience=sched_patience,
         )
+        # the transform pipeline runs inside the per-shard recv body, so
+        # per-lane transform state shards with the env states and
+        # NormalizeObs merges its moment sums with one fixed-size psum
+        # over ``axis_name`` (statistics only — never env data), keeping
+        # the replicated moments identical on every shard.
         self.inner = DeviceEnvPool(
             env, num_envs // d, batch_size // d, mode=mode, aging=aging,
             batched=batched, schedule=self.scheduler,
+            transforms=transforms, tf_axis=axis_name,
         )
+        self.pipeline = self.inner.pipeline
+        self.raw_spec = env.spec
+        self.spec = self.inner.spec
 
     # ------------------------------------------------------------------ #
     # shard_map plumbing

@@ -2,7 +2,17 @@
 cost structure (paper §4.1 benchmarks Atari Pong with frameskip 4).
 
 Matched properties with the real benchmark target:
-  * observation: stacked 4 × 84 × 84 uint8 frames (post-wrapper ALE layout),
+  * observation: one RAW 84 × 84 uint8 frame (the emulator's post-skip
+    screen).  The classic stacked 4 × 84 × 84 agent layout is produced
+    by the in-engine transform pipeline (``core/transforms.py`` —
+    ``make("Pong-v5")`` registers ``FrameStack(4)`` as the default),
+    exactly where EnvPool runs it: inside the engine, not in per-env
+    Python wrappers.  The env renders once per *serve* (in ``observe``)
+    instead of once per emulator frame — the frame buffer that used to
+    ride in the state is gone, which also shrinks the hot-path state by
+    4 × 84 × 84 bytes per lane.  Dynamics, rng stream and the
+    reward/done/cost streams are bitwise-unchanged by this refactor
+    (pinned by tests/golden_atari_stream.npz, captured pre-refactor).
   * frameskip 4 — each agent step advances 4 emulator frames,
   * variable step cost: 4 base frames, +2 on point-score (ball respawn /
     serve animation), +3 on episode reset (ROM reboot) — this is the
@@ -22,7 +32,7 @@ from repro.utils.pytree import pytree_dataclass
 
 H = W = 84
 PADDLE_LEN = 12
-FRAME_STACK = 4
+FRAME_STACK = 4   # default FrameStack(k) of the registered Pong-v5 pipeline
 WIN_SCORE = 21
 
 
@@ -36,7 +46,6 @@ class AtariLikeState:
     enemy_y: jnp.ndarray     # scripted opponent (left side)
     score_us: jnp.ndarray
     score_them: jnp.ndarray
-    frames: jnp.ndarray      # (FRAME_STACK, H, W) uint8
     just_scored: jnp.ndarray # bool: a point was scored in the previous step
     t: jnp.ndarray
     rng: jax.Array
@@ -50,7 +59,7 @@ class AtariLike(Environment):
     def __init__(self, max_episode_steps: int = 2000):
         self.spec = EnvSpec(
             name="AtariLike-Pong-v5",
-            obs_spec=ArraySpec((FRAME_STACK, H, W), jnp.uint8, 0, 255),
+            obs_spec=ArraySpec((H, W), jnp.uint8, 0, 255),
             act_spec=ArraySpec((), jnp.int32, 0, 5),
             max_episode_steps=max_episode_steps,
             min_cost=4,          # frameskip
@@ -63,7 +72,7 @@ class AtariLike(Environment):
         angle = jax.random.uniform(k1, (), jnp.float32, -0.7, 0.7)
         side = jnp.where(jax.random.bernoulli(k2), 1.0, -1.0)
         z = jnp.float32(0.0)
-        s = AtariLikeState(
+        return AtariLikeState(
             ball_x=jnp.float32(W / 2),
             ball_y=jnp.float32(H / 2),
             ball_vx=side * 1.5 * jnp.cos(angle),
@@ -72,15 +81,12 @@ class AtariLike(Environment):
             enemy_y=jnp.float32(H / 2),
             score_us=jnp.int32(0),
             score_them=jnp.int32(0),
-            frames=jnp.zeros((FRAME_STACK, H, W), jnp.uint8),
             just_scored=jnp.bool_(False),
             t=jnp.int32(0),
             rng=rng,
             ep_return=z,
             reward_acc=z,
         )
-        frame = self._render(s)
-        return s.replace(frames=jnp.broadcast_to(frame, (FRAME_STACK, H, W)))
 
     def _render(self, s: AtariLikeState) -> jnp.ndarray:
         ys = jnp.arange(H, dtype=jnp.float32)[:, None]
@@ -146,13 +152,11 @@ class AtariLike(Environment):
 
     # -------------------------------------------------------------- #
     def substep(self, s: AtariLikeState, action) -> AtariLikeState:
-        s = self._advance_frame(s, action)
-        # push the newest frame into the stack (render only once per
-        # substep; the last rendered frame of the skip dominates, matching
-        # the ALE max-pool wrapper's effect on cost).
-        frame = self._render(s)
-        frames = jnp.concatenate([s.frames[1:], frame[None]], axis=0)
-        return s.replace(frames=frames)
+        # pure physics: the screen is rendered lazily in ``observe`` —
+        # once per serve instead of once per emulator frame (the last
+        # frame of the skip is the one the agent sees, matching the ALE
+        # skip wrapper's output; stacking is the pipeline's job)
+        return self._advance_frame(s, action)
 
     def step_cost(self, s: AtariLikeState, action) -> jnp.ndarray:
         base = jnp.int32(4)                         # frameskip
@@ -164,7 +168,7 @@ class AtariLike(Environment):
         return (s.score_us >= WIN_SCORE) | (s.score_them >= WIN_SCORE)
 
     def observe(self, s: AtariLikeState) -> jnp.ndarray:
-        return s.frames
+        return self._render(s)
 
     def pre_step(self, s: AtariLikeState) -> AtariLikeState:
         # clear the score latch after step_cost consumed it

@@ -115,7 +115,9 @@ class PyPendulum(HostEnv):
 
 
 class PyAtariLike(HostEnv):
-    """NumPy port of envs/atari_like.py (frameskip 4, 4x84x84 uint8)."""
+    """NumPy port of envs/atari_like.py (frameskip 4, raw 84x84 uint8
+    frames; stacking is the engine pipeline's job, mirroring the JAX
+    env's raw-frame refactor)."""
 
     H = W = 84
     PAD = 12
@@ -123,7 +125,7 @@ class PyAtariLike(HostEnv):
     def __init__(self, seed: int = 0, max_episode_steps: int = 2000):
         self.spec = EnvSpec(
             name="AtariLike-Pong-v5",
-            obs_spec=ArraySpec((4, 84, 84), np.uint8, 0, 255),
+            obs_spec=ArraySpec((84, 84), np.uint8, 0, 255),
             act_spec=ArraySpec((), np.int32, 0, 5),
             max_episode_steps=max_episode_steps,
             min_cost=4,
@@ -146,9 +148,7 @@ class PyAtariLike(HostEnv):
         self.just_scored = False
         self._t = 0
         self._ret = 0.0
-        frame = self._render()
-        self.frames = np.stack([frame] * 4)
-        return self.frames
+        return self._render()
 
     def _render(self):
         ball = (np.abs(self._ys - self.by) <= 1.0) & (np.abs(self._xs - self.bx) <= 1.0)
@@ -197,8 +197,6 @@ class PyAtariLike(HostEnv):
         reward = 0.0
         for _ in range(cost):
             reward += self._frame(int(action))
-            frame = self._render()
-            self.frames = np.concatenate([self.frames[1:], frame[None]])
         self._t += 1
         self._ret += reward
         terminated = self.su >= 21 or self.st >= 21
@@ -211,7 +209,7 @@ class PyAtariLike(HostEnv):
             "episode_length": self._t if done else 0,
             "step_cost": cost,
         }
-        obs = self.frames
+        obs = self._render()
         if done:
             obs = self.reset()
         return obs, reward, done, info

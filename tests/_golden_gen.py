@@ -10,6 +10,7 @@ Usage: PYTHONPATH=src python tests/_golden_gen.py
 """
 
 import os
+import sys
 
 import numpy as np
 
@@ -65,6 +66,32 @@ def thread_stream(n: int):
         pool.close()
 
 
+def atari_stream(steps: int = 32, n: int = 4):
+    """Golden streams for tests/golden_atari_stream.npz.
+
+    ``ids/rew/done/cost`` were captured from the PRE-transform-pipeline
+    ``AtariLike`` (intra-step frame buffer, stacked obs in the env) and
+    pin that the raw-frame refactor left dynamics/rng bitwise-unchanged;
+    ``obs_stack`` pins the default in-engine ``FrameStack(4)`` pipeline
+    output as of the transform-subsystem PR.  Regenerating this file
+    just blesses new behavior — don't, unless the contract moves.
+    """
+    pool = make("Pong-v5", num_envs=n, seed=SEED)
+    ps, ts = pool.reset(jax.random.PRNGKey(SEED))
+    step = jax.jit(pool.step)
+    ids, rew, done, cost, obs = [], [], [], [], []
+    for t in range(steps):
+        i = np.asarray(ts.env_id)
+        a = jnp.asarray(((i * 3 + t) % 6).astype(np.int32))
+        ps, ts = step(ps, a, ts.env_id)
+        ids.append(np.asarray(ts.env_id))
+        rew.append(np.asarray(ts.reward))
+        done.append(np.asarray(ts.done))
+        cost.append(np.asarray(ts.step_cost))
+        obs.append(np.asarray(ts.obs))
+    return map(np.stack, (ids, rew, done, cost, obs))
+
+
 def main() -> None:
     data = {}
     for tag, engine, n, m, kw in [
@@ -83,6 +110,19 @@ def main() -> None:
                        "golden_fifo_streams.npz")
     np.savez_compressed(out, **data)
     print(f"wrote {out}: " + ", ".join(sorted(data)))
+
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "golden_atari_stream.npz")
+    if os.path.exists(out) and "--force-atari" not in sys.argv:
+        # ids/rew/done/cost were captured from the PRE-transform-pipeline
+        # engine — rewriting them from current code would re-bless
+        # whatever the current dynamics produce and void the pin
+        print(f"kept {out} (pre-refactor capture; --force-atari overwrites)")
+        return
+    i, r, d, c, o = atari_stream()
+    atari = {"ids": i, "rew": r, "done": d, "cost": c, "obs_stack": o}
+    np.savez_compressed(out, **atari)
+    print(f"wrote {out}: " + ", ".join(sorted(atari)))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,134 @@
+"""Subprocess helper for tests/test_transforms.py.
+
+The tier-1 suite runs on ONE device (conftest harness contract), so the
+multi-device transform assertions run here, in a fresh interpreter that
+forces D simulated host devices before jax locks the platform.  Checks:
+
+  * transformed streams (default ``FrameStack(4)`` Pong pipeline) are
+    bitwise-identical across mesh sizes {1, 2, D} — shard count is a
+    pure throughput knob even with per-lane transform state sharded
+    alongside the env states;
+  * ``NormalizeObs`` running moments are mesh-size-invariant (the psum
+    merge of per-shard batch statistics; f32 summation order only);
+  * the sharded transformed stream equals the single-device engine's,
+    bitwise.
+
+Prints one JSON object; the parent test asserts on it.
+
+Usage: python tests/_transform_mesh_check.py [D]
+"""
+
+import json
+import os
+import re
+import sys
+
+D = int(sys.argv[1]) if len(sys.argv) > 1 else 4
+# drop any inherited device-count override (e.g. the 512-device flag the
+# dryrun tests export into the parent's os.environ) — ours must win
+_flags = re.sub(r"--xla_force_host_platform_device_count=\S+", "",
+                os.environ.get("XLA_FLAGS", ""))
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={D} " + _flags
+).strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.registry import make  # noqa: E402
+
+STEPS = 4
+N = 4  # envs; divisible by every mesh size in {1, 2, 4}
+
+
+def pong_rollout(shards: int | None):
+    """Sync scripted rollout of the default (FrameStack) Pong pipeline;
+    ``shards=None`` is the single-device engine."""
+    if shards is None:
+        pool = make("Pong-v5", num_envs=N, seed=0)
+    else:
+        pool = make("Pong-v5", num_envs=N, engine="device-sharded",
+                    num_shards=shards, seed=0)
+    ps, ts = pool.reset(jax.random.PRNGKey(0))
+    step = jax.jit(pool.step)
+    obs, rew, done, ids = [], [], [], []
+    for t in range(STEPS):
+        i = np.asarray(ts.env_id)
+        order = np.argsort(i)
+        ids.append(i[order])
+        obs.append(np.asarray(ts.obs)[order])
+        rew.append(np.asarray(ts.reward)[order])
+        done.append(np.asarray(ts.done)[order])
+        a = jnp.asarray(((i * 3 + t) % 6).astype(np.int32))
+        ps, ts = step(ps, a, ts.env_id)
+    return map(np.stack, (ids, rew, done, obs))
+
+
+def ant_moments(shards: int):
+    """AntNorm rollout; returns (normalized obs stream, final moments)."""
+    pool = make("AntNorm-v3", num_envs=N, engine="device-sharded",
+                num_shards=shards, seed=0)
+    ps, ts = pool.reset(jax.random.PRNGKey(0))
+    step = jax.jit(pool.step)
+    obs = []
+    for t in range(STEPS):
+        i = np.asarray(ts.env_id)
+        obs.append(np.asarray(ts.obs)[np.argsort(i)])
+        a = jnp.asarray(
+            np.sin(i[:, None] * 0.7 + t * 0.3 + np.arange(8)[None, :]),
+            jnp.float32,
+        )
+        ps, ts = step(ps, a, ts.env_id)
+    # tf_state: one entry per transform; NormalizeObs is entry 0.  The
+    # sharded pool stacks a leading shard dim — every shard's replicated
+    # copy must be identical (the psum-merge invariant).
+    moments = jax.tree.map(np.asarray, ps.tf_state[0])
+    return np.stack(obs), moments
+
+
+def main() -> dict:
+    res: dict = {"devices": len(jax.devices()), "mesh": D}
+
+    meshes = sorted({1, 2, D})
+    ref = [np.asarray(x) for x in pong_rollout(None)]
+    ok_stream = True
+    for d in meshes:
+        got = [np.asarray(x) for x in pong_rollout(d)]
+        ok_stream &= all(np.array_equal(a, b) for a, b in zip(ref, got))
+    res["pong_stream_bitwise_all_meshes"] = bool(ok_stream)
+
+    streams, moments = {}, {}
+    for d in meshes:
+        streams[d], moments[d] = ant_moments(d)
+    shard_copies_equal = True
+    for d in meshes:
+        m = moments[d]
+        for leaf in (m["count"], m["mean"], m["m2"]):
+            for s in range(1, leaf.shape[0]):
+                shard_copies_equal &= bool(np.array_equal(leaf[0], leaf[s]))
+    res["norm_shard_copies_identical"] = shard_copies_equal
+
+    mesh_invariant = True
+    base = moments[meshes[0]]
+    for d in meshes[1:]:
+        m = moments[d]
+        mesh_invariant &= bool(np.array_equal(base["count"][0], m["count"][0]))
+        for k in ("mean", "m2"):
+            mesh_invariant &= bool(np.allclose(
+                base[k][0], m[k][0], rtol=1e-5, atol=1e-5
+            ))
+    res["norm_moments_mesh_invariant"] = mesh_invariant
+
+    stream_close = all(
+        bool(np.allclose(streams[meshes[0]], streams[d],
+                         rtol=1e-4, atol=1e-4))
+        for d in meshes[1:]
+    )
+    res["norm_stream_mesh_close"] = stream_close
+    return res
+
+
+if __name__ == "__main__":
+    print(json.dumps(main()))
