@@ -25,6 +25,15 @@ on the sharded engine at ``--mesh`` shards (default 4), writing the
 ``BENCH_schedule.json`` artifact; ``--min-schedule-ratio`` gates CI on
 best(sjf, hierarchical)/fifo FPS.
 
+``--resident`` A/Bs the device-resident collect loop (the donated
+``lax.scan`` over the mesh engine — ``PoolState`` never leaves the
+mesh) against the per-step host-driven recv loop (one jitted step
+dispatch per env step, batch materialized on the host each step) at
+mesh 1 and ``--mesh`` D, writing ``BENCH_resident.json``;
+``--min-resident-ratio`` gates CI on resident/host-driven FPS at
+mesh=D — the acceptance check that the PPO-style scan loop keeps its
+zero-host-round-trip advantage.
+
 ``--transforms`` A/Bs the in-engine transform pipeline
 (``core/transforms.py``, fused into the jitted recv) against the
 classic python-wrapper placement (raw pool + the numpy mirror applied
@@ -241,6 +250,76 @@ def run_schedule(mesh: int, task: str = "TokenSkew-v0",
     return rows, summary
 
 
+def bench_resident_pair(task: str, envs_per_shard: int, shards: int,
+                        steps: int = 40, iters: int = 3
+                        ) -> tuple[float, float]:
+    """(resident FPS, host-driven FPS) for one mesh size: the SAME pool
+    and random policy driven by the donated device-resident scan vs the
+    per-step host-materializing loop (``build_stepwise_collect_fn``)."""
+    import jax
+
+    from repro.core.registry import make
+    from repro.core.xla_loop import (
+        build_collect_fn,
+        build_stepwise_collect_fn,
+    )
+
+    pool = make(task, num_envs=envs_per_shard * shards,
+                engine="device-sharded", num_shards=shards)
+    spec = pool.spec
+
+    def policy(params, obs, key):
+        del params, obs
+        return spec.act_spec.sample_jax(key, (pool.batch_size,))
+
+    out = {}
+    for tag, build in (("resident", build_collect_fn),
+                       ("host", build_stepwise_collect_fn)):
+        collect = build(pool, policy, num_steps=steps)
+        ps, ts = pool.reset(jax.random.PRNGKey(0))
+        ps, ts, traj, _ = collect(ps, None, ts, jax.random.PRNGKey(1))
+        jax.block_until_ready(traj.reward)
+        frames = 0.0
+        t0 = time.time()
+        for i in range(iters):
+            ps, ts, traj, _ = collect(ps, None, ts, jax.random.PRNGKey(2 + i))
+            frames += float(np.asarray(traj.step_cost).sum())
+        jax.block_until_ready(traj.reward)
+        out[tag] = frames / (time.time() - t0)
+    return out["resident"], out["host"]
+
+
+def run_resident(mesh: int, task: str = "TokenCopy-v0",
+                 envs_per_shard: int = 16, steps: int = 40, iters: int = 3
+                 ) -> tuple[list[str], dict]:
+    """Device-resident vs host-driven collect A/B at mesh 1 and D (see
+    --resident).  The resident loop is what ``rl/ppo.train_device``
+    runs; the gate pins that its zero-host-round-trip structure keeps
+    paying off on the multi-device mesh."""
+    rows: list[str] = []
+    unit = fps_unit(task)
+    fps: dict[str, dict[str, float]] = {}
+    for d in sorted({1, mesh}):
+        res, host = bench_resident_pair(task, envs_per_shard, d,
+                                        steps=steps, iters=iters)
+        fps[str(d)] = {"resident": res, "host_driven": host,
+                       "ratio": res / max(host, 1e-9)}
+        rows.append(f"resident_{task}_scan_mesh{d},"
+                    f"{1e6/max(res,1e-9):.3f},{res:.0f} {unit}/s")
+        rows.append(f"resident_{task}_hostdriven_mesh{d},"
+                    f"{1e6/max(host,1e-9):.3f},{host:.0f} {unit}/s")
+        rows.append(f"resident_{task}_RATIO_mesh{d},"
+                    f"{fps[str(d)]['ratio']:.3f},resident/host-driven FPS")
+    summary = {
+        "task": task,
+        "mesh": mesh,
+        "envs_per_shard": envs_per_shard,
+        "fps": fps,
+        "gate_ratio": fps[str(mesh)]["ratio"],
+    }
+    return rows, summary
+
+
 def bench_transform_placement(task: str, num_envs: int, steps: int,
                               iters: int, wrapper: bool) -> float:
     """FPS of one preprocessing placement: ``wrapper=False`` runs the
@@ -385,6 +464,13 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--min-schedule-ratio", type=float, default=0.0,
                     help="fail (exit 1) if best(sjf,hierarchical)/fifo FPS "
                          "drops below this (CI gate)")
+    ap.add_argument("--resident", action="store_true",
+                    help="device-resident scan vs per-step host-driven "
+                         "collect A/B at mesh 1 and --mesh (default 4); "
+                         "writes BENCH_resident.json")
+    ap.add_argument("--min-resident-ratio", type=float, default=0.0,
+                    help="fail (exit 1) if resident/host-driven FPS at "
+                         "mesh=D drops below this (CI gate)")
     ap.add_argument("--transforms", action="store_true",
                     help="in-engine transform pipeline vs python-wrapper "
                          "A/B on PongStack-v5; writes BENCH_transforms.json")
@@ -407,19 +493,28 @@ def main(argv: list[str] | None = None) -> int:
 
     rows: list[str] = []
     extra: dict = {}
-    if args.mesh or args.schedule:
+    if args.mesh or args.schedule or args.resident:
         mesh = args.mesh or 4
         # must precede ANY jax import in this process
         if "jax" in sys.modules:
             raise RuntimeError(
-                "--mesh/--schedule require jax to not be imported yet"
+                "--mesh/--schedule/--resident require jax to not be "
+                "imported yet"
             )
         flags = os.environ.get("XLA_FLAGS", "")
         if "host_platform_device_count" not in flags:
             os.environ["XLA_FLAGS"] = (
                 f"{flags} --xla_force_host_platform_device_count={mesh}"
             ).strip()
-    if args.schedule:
+    if args.resident:
+        if args.smoke:
+            args.envs_per_shard, args.steps, args.iters = 16, 16, 1
+        rows, summary = run_resident(mesh, args.task, args.envs_per_shard,
+                                     args.steps, args.iters)
+        extra = {"mode": "resident", "resident": summary}
+        if args.json is None:
+            args.json = os.path.join(ROOT, "BENCH_resident.json")
+    elif args.schedule:
         task = args.task if args.task != "TokenCopy-v0" else "TokenSkew-v0"
         if args.smoke:
             args.envs_per_shard, args.steps, args.iters = 16, 24, 1
@@ -466,6 +561,15 @@ def main(argv: list[str] | None = None) -> int:
                   f"{args.min_ab_ratio}")
             return 1
         print(f"[bench] ratio {ratio:.3f} >= {args.min_ab_ratio} OK")
+    if extra.get("mode") == "resident" and args.min_resident_ratio > 0:
+        ratio = extra["resident"]["gate_ratio"]
+        d = extra["resident"]["mesh"]
+        if ratio < args.min_resident_ratio:
+            print(f"[bench] FAIL: resident/host-driven ratio {ratio:.3f} "
+                  f"< {args.min_resident_ratio} at mesh={d}")
+            return 1
+        print(f"[bench] resident/host-driven ratio {ratio:.3f} >= "
+              f"{args.min_resident_ratio} at mesh={d} OK")
     if extra.get("mode") == "schedule" and args.min_schedule_ratio > 0:
         ratio = extra["schedule"]["best_over_fifo"]
         best = extra["schedule"]["best"]

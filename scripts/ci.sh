@@ -29,6 +29,15 @@ if [ -z "${CI_SKIP_BENCH:-}" ]; then
     python benchmarks/bench_throughput.py --schedule --smoke \
         --min-schedule-ratio 1.15
 
+    echo "== device-resident vs host-driven collect A/B (mesh 1 and 4) =="
+    # the unified mesh engine's acceptance gate: the donated lax.scan
+    # collect (what rl/ppo.train_device runs — PoolState never leaves
+    # the mesh) must keep beating the per-step host-driven recv loop at
+    # mesh=4 (typical ≥ 5x on 2-core CI; the 1.2 floor is the
+    # regression gate).  Writes BENCH_resident.json.
+    python benchmarks/bench_throughput.py --resident --smoke \
+        --min-resident-ratio 1.2
+
     echo "== transform-pipeline conformance (device/sharded mesh 1,2,4/thread) =="
     # the in-engine pipeline's engine-conformance + golden-pin tests
     # (also part of tier-1 above; re-run standalone so a bench-only CI

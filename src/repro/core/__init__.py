@@ -15,6 +15,7 @@
 #     reference fallback on CPU; a bitwise-equivalent vmap-lifting
 #     adapter everywhere else).
 from repro.core.device_pool import DeviceEnvPool, PoolState, make_pool
+from repro.core.engine import MeshEnvPool
 from repro.core.protocol import (
     BoundEnvPool,
     EnvPool,
@@ -55,6 +56,7 @@ __all__ = [
     "EpisodicLife",
     "FrameStack",
     "FunctionalEnvPool",
+    "MeshEnvPool",
     "NormalizeObs",
     "ObsCast",
     "PoolState",

@@ -1,423 +1,34 @@
-"""DeviceEnvPool — the TPU-native EnvPool (DESIGN.md §2.1).
+"""``DeviceEnvPool`` — the TPU-native EnvPool over the degenerate mesh.
 
-EnvPool's C++ machinery is re-thought for a synchronous dataflow machine:
+The engine implementation lives in ``core/engine.py``: ONE mesh-native
+core (``MeshEnvPool``) whose logic is written once as per-shard pure
+functions over ``PoolState`` and wrapped in ``shard_map`` over a 1-D
+device mesh.  ``DeviceEnvPool`` IS that class — ``engine="device"`` is
+simply the ``num_shards=1`` degenerate mesh (and
+``engine="device-sharded"`` the same class over more devices; see
+``core/sharded_pool.py`` for the all-devices constructor default).
 
-  ThreadPool workers      -> vmap lanes over a structure-of-arrays pytree
-  ActionBufferQueue       -> pre-allocated (N, ...) action table, scatter on send
-  StateBufferQueue block  -> the (M, ...) output batch, one gather on recv
-  "recv waits for the     -> a pluggable top-M selection on the data-
-   first M finished"         dependent step_cost (``core/scheduler.py``;
-                             ``schedule=`` picks fifo/sjf/hierarchical);
-                             on a synchronous machine, waiting IS
-                             computing, so "wait for the first M"
-                             becomes "compute only the M that would
-                             finish first"
-  sync mode (M == N)      -> step every lane; the fused multi-substep
-                             pads all lanes to the batch max cost
-                             (paper Fig. 2a)
-
-Execution is batched-native (envs/batch.py): every recv drives ONE fused
-multi-substep call over the selected block — the Pallas ``env_step``
-kernel for envs that provide it, the bitwise-equal masked-loop vmap
-adapter otherwise — never per-lane ``env.step`` loops under vmap.
-The in-engine transform pipeline (``core/transforms.py``, selected by
-``transforms=[...]``) runs over the same served block inside the jitted
-recv: stacking/clipping/normalization lower into the same XLA program
-as the step itself (EnvPool's in-engine preprocessing, paper §3.4);
-transform state lives on ``PoolState`` alongside the scheduler signals.
-
-Three execution modes:
-  * ``sync``   — step all N each recv (gym.vector semantics, M = N).
-  * ``async``  — top-M shortest-job-first gather/step/scatter (the paper's
-                 default mode; M < N hides the long tail).
-  * ``masked`` — event-driven ablation: every tick advances all busy lanes
-                 one substep; recv loops ticks until M results are ready.
-                 Literal EnvPool semantics, but idle lanes burn compute.
-
-All methods are pure functions over ``PoolState`` → the whole pool is
-jittable and usable inside ``lax.scan`` (paper Appendix E's ``env.xla()``).
+This module keeps the historical import surface
+(``DeviceEnvPool`` / ``PoolState`` / ``derive_env_keys`` /
+``make_pool``) stable for drivers, benchmarks and tests.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Any
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax import lax
-
-from repro.core.scheduler import (
-    HAS_ACTION,
-    READY,
-    WAITING_ACTION,
-    SchedState,
-    Scheduler,
-    get_scheduler,
+from repro.core.engine import (
+    MeshEnvPool,
+    PoolState,
+    derive_env_keys,
+    make_pool,
 )
-from repro.core.specs import EnvSpec, TimeStep
-from repro.core.transforms import TransformPipeline
-from repro.envs.base import Environment
-from repro.envs.batch import as_batch_env
-from repro.utils.pytree import pytree_dataclass, tree_gather
 
+# one engine class serves every mesh size; the classic name is the
+# degenerate-mesh default (mesh=None -> first device only)
+DeviceEnvPool = MeshEnvPool
 
-def derive_env_keys(key: jax.Array, num_envs: int) -> tuple[jax.Array, jax.Array]:
-    """``(env_keys, pool_rng)`` from one seed key — THE formula every
-    engine shares, so identical seeds give identical per-env init states
-    across device, sharded, and host engines (engine-conformance
-    contract, tests/test_conformance.py)."""
-    rng, sub = jax.random.split(key)
-    return jax.random.split(sub, num_envs), rng
-
-
-@pytree_dataclass
-class PoolState:
-    env_states: Any            # pytree, leading dim N
-    phase: jnp.ndarray         # (N,) int32
-    actions: jnp.ndarray       # (N, *act_shape) action table
-    cost: jnp.ndarray          # (N,) int32 predicted cost of pending step
-    send_tick: jnp.ndarray     # (N,) int32 tick when action was enqueued
-    progress: jnp.ndarray      # (N,) int32 substeps done (masked mode)
-    # stored results for READY envs (obs always re-derived from env state)
-    r_reward: jnp.ndarray
-    r_done: jnp.ndarray
-    r_term: jnp.ndarray
-    r_trunc: jnp.ndarray
-    r_ep_return: jnp.ndarray
-    r_ep_length: jnp.ndarray
-    r_cost: jnp.ndarray
-    tick: jnp.ndarray          # int32 global recv counter
-    rng: jax.Array
-    # transform-pipeline state (core/transforms.py): one entry per
-    # transform; per-lane leaves carry the leading N dim, global leaves
-    # (e.g. NormalizeObs moments) are fixed-size.  Empty tuple when the
-    # pool has no transforms — zero pytree leaves, so the classic
-    # engine behavior (and its goldens) is bitwise-unchanged.
-    tf_state: Any = ()
-
-
-class DeviceEnvPool:
-    """EnvPool with ``num_envs`` N and ``batch_size`` M (paper §3.2).
-
-    ``batch_size == num_envs`` is synchronous mode; smaller is async.
-    """
-
-    def __init__(
-        self,
-        env: Environment,
-        num_envs: int,
-        batch_size: int | None = None,
-        mode: str = "async",
-        aging: float = 1.0,
-        batched: bool | None = None,
-        schedule: str | Scheduler = "fifo",
-        sched_patience: float = 1.0,
-        transforms: Any = (),
-        tf_axis: str | None = None,
-    ):
-        if batch_size is None:
-            batch_size = num_envs
-        if batch_size > num_envs:
-            raise ValueError("batch_size cannot exceed num_envs (paper §3.2)")
-        if mode not in ("sync", "async", "masked"):
-            raise ValueError(f"unknown mode {mode!r}")
-        if mode == "sync" and batch_size != num_envs:
-            raise ValueError("sync mode requires batch_size == num_envs")
-        # selection policy (core/scheduler.py): which M lanes each recv
-        # serves.  ``aging`` parameterizes the fifo policy's starvation
-        # guard, ``sched_patience`` the hierarchical policy's fairness
-        # deadline; an explicit Scheduler instance wins over all knobs
-        # (the sharded pool passes the hierarchical policy this way).
-        self.scheduler = get_scheduler(schedule, aging=aging,
-                                       patience=sched_patience)
-        self.env = env
-        # in-engine transform pipeline (core/transforms.py): applied to
-        # every served block INSIDE the jitted recv, so preprocessing
-        # lowers into the same XLA program as the fused multi-substep.
-        # ``tf_axis`` is the mesh axis name when this pool body runs
-        # inside a shard_map (sharded engine) — NormalizeObs merges its
-        # moment sums over it.
-        self.pipeline = TransformPipeline(transforms, env.spec,
-                                          axis_name=tf_axis)
-        self.raw_spec = env.spec
-        # THE hot-path engine: a batched-native view of the env.  All
-        # recv/tick bodies drive batched primitives (one fused
-        # multi-substep call per batch) — never per-lane ``env.step``
-        # under vmap.  ``batched=False`` forces the generic vmap-lifting
-        # adapter (the A/B baseline); None lets the env pick its native
-        # implementation (e.g. the Pallas kernel for MujocoLike).
-        self.benv = as_batch_env(env, native=batched)
-        # drivers see the TRANSFORMED spec (obs shape/dtype/bounds stay
-        # truthful after stacking/casting); act_spec is never changed
-        self.spec = self.pipeline.out_spec
-        self.num_envs = int(num_envs)
-        self.batch_size = int(batch_size)
-        self.mode = mode
-
-    # ------------------------------------------------------------------ #
-    # construction / reset
-    # ------------------------------------------------------------------ #
-    def init(self, key: jax.Array) -> PoolState:
-        """async_reset (paper A.3): every env resets; all N results READY."""
-        env_keys, rng = derive_env_keys(key, self.num_envs)
-        return self.init_from_keys(env_keys, rng)
-
-    def init_from_keys(self, env_keys: jax.Array, rng: jax.Array) -> PoolState:
-        """Init from externally-derived per-env keys.
-
-        ``ShardedDeviceEnvPool`` uses this so that the per-env key
-        assignment — and hence every env's trajectory — is independent of
-        how the pool is sharded across devices.
-        """
-        env_states = self.benv.v_init_state(env_keys)
-        N = self.num_envs
-        act = self.spec.act_spec
-        return PoolState(
-            env_states=env_states,
-            phase=jnp.full((N,), READY, jnp.int32),
-            actions=jnp.zeros((N,) + act.shape, act.dtype),
-            cost=jnp.zeros((N,), jnp.int32),
-            send_tick=jnp.zeros((N,), jnp.int32),
-            progress=jnp.zeros((N,), jnp.int32),
-            r_reward=jnp.zeros((N,), jnp.float32),
-            r_done=jnp.zeros((N,), jnp.bool_),
-            r_term=jnp.zeros((N,), jnp.bool_),
-            r_trunc=jnp.zeros((N,), jnp.bool_),
-            r_ep_return=jnp.zeros((N,), jnp.float32),
-            r_ep_length=jnp.zeros((N,), jnp.int32),
-            r_cost=jnp.zeros((N,), jnp.int32),
-            tick=jnp.int32(0),
-            rng=rng,
-            tf_state=self.pipeline.init(N),
-        )
-
-    # ------------------------------------------------------------------ #
-    # send — ActionBufferQueue enqueue
-    # ------------------------------------------------------------------ #
-    def _sched_view(self, ps: PoolState) -> SchedState:
-        """The scheduler's lane signals, aliased onto PoolState fields."""
-        return SchedState(
-            phase=ps.phase, cost=ps.cost, send_tick=ps.send_tick, tick=ps.tick
-        )
-
-    def _serve(self, ps: PoolState, idx: jnp.ndarray, out: TimeStep
-               ) -> tuple[PoolState, TimeStep]:
-        """Run the transform pipeline over one served (raw) block —
-        inside the caller's jit scope, so on the device path the
-        preprocessing fuses into the same XLA program as the recv
-        itself.  Applied exactly once per served result (both recv
-        flavors serve through here); per-lane transform state rows are
-        gathered for the block and scattered back onto ``PoolState``."""
-        if not self.pipeline:
-            return ps, out
-        blk = self.pipeline.gather(ps.tf_state, idx)
-        blk, out = self.pipeline.apply(blk, out)
-        return (
-            ps.replace(tf_state=self.pipeline.scatter(ps.tf_state, idx, blk)),
-            out,
-        )
-
-    def send(self, ps: PoolState, actions: jnp.ndarray, env_ids: jnp.ndarray
-             ) -> PoolState:
-        """Store actions for ``env_ids``; returns immediately (paper §3.1)."""
-        env_ids = env_ids.astype(jnp.int32)
-        sel_states = tree_gather(ps.env_states, env_ids)
-        costs = self.benv.v_step_cost(sel_states, actions)
-        costs = jnp.clip(costs, self.spec.min_cost, self.spec.max_cost)
-        ss = self.scheduler.enqueue(self._sched_view(ps), env_ids, costs)
-        return ps.replace(
-            actions=ps.actions.at[env_ids].set(actions.astype(ps.actions.dtype)),
-            phase=ss.phase,
-            cost=ss.cost,
-            send_tick=ss.send_tick,
-            progress=ps.progress.at[env_ids].set(0),
-        )
-
-    # ------------------------------------------------------------------ #
-    # recv — StateBufferQueue block of M results
-    # ------------------------------------------------------------------ #
-    def recv(self, ps: PoolState) -> tuple[PoolState, TimeStep]:
-        if self.mode == "masked":
-            return self._recv_masked(ps)
-        return self._recv_topm(ps)
-
-    def _recv_topm(self, ps: PoolState) -> tuple[PoolState, TimeStep]:
-        idx = self.scheduler.select(self._sched_view(ps), self.batch_size)
-
-        sel_states = tree_gather(ps.env_states, idx)
-        sel_actions = ps.actions[idx]
-        sel_phase = ps.phase[idx]
-        need_step = sel_phase == HAS_ACTION
-
-        # batched-native step: ONE fused multi-substep call for the
-        # whole block (per-lane data-dependent cost handled inside)
-        new_states, ts = self.benv.v_step(sel_states, sel_actions, need_step)
-
-        # ONE observe pass over the post-step states serves every lane:
-        # for stepped lanes ``new_states`` is the finalized state (its
-        # observe is bitwise ``ts.obs``); for ``do=False`` lanes
-        # ``v_step`` restored the original state, so this re-derives the
-        # CURRENT obs — the phantom-obs fix (their discarded finalize
-        # pass is one step ahead for t-dependent observations).  Not
-        # reading ``ts.obs`` lets XLA dead-code-eliminate the finalize
-        # observe, which matters for render-on-observe envs (AtariLike):
-        # one frame render per recv instead of two.
-        obs = self.benv.v_observe(new_states)
-        out = TimeStep(
-            obs=obs,
-            reward=jnp.where(need_step, ts.reward, ps.r_reward[idx]),
-            done=jnp.where(need_step, ts.done, ps.r_done[idx]),
-            terminated=jnp.where(need_step, ts.terminated, ps.r_term[idx]),
-            truncated=jnp.where(need_step, ts.truncated, ps.r_trunc[idx]),
-            env_id=idx,
-            episode_return=jnp.where(
-                need_step, ts.episode_return, ps.r_ep_return[idx]
-            ),
-            episode_length=jnp.where(
-                need_step, ts.episode_length, ps.r_ep_length[idx]
-            ),
-            step_cost=jnp.where(need_step, ts.step_cost, ps.r_cost[idx]),
-        )
-        env_states = jax.tree.map(
-            lambda full, upd: full.at[idx].set(upd), ps.env_states, new_states
-        )
-        ss = self.scheduler.complete(self._sched_view(ps), idx)
-        ps = ps.replace(
-            env_states=env_states,
-            phase=ss.phase,
-            r_reward=ps.r_reward.at[idx].set(out.reward),
-            r_done=ps.r_done.at[idx].set(out.done),
-            r_term=ps.r_term.at[idx].set(out.terminated),
-            r_trunc=ps.r_trunc.at[idx].set(out.truncated),
-            r_ep_return=ps.r_ep_return.at[idx].set(out.episode_return),
-            r_ep_length=ps.r_ep_length.at[idx].set(out.episode_length),
-            r_cost=ps.r_cost.at[idx].set(out.step_cost),
-            tick=ss.tick,
-        )
-        # stored r_* results stay RAW; the pipeline runs at serve time
-        # (masked mode serves stored results through the same path, so
-        # both recv flavors emit identical transformed streams)
-        return self._serve(ps, idx, out)
-
-    # ------------------------------------------------------------------ #
-    # masked (event-driven tick) mode — the literal-semantics ablation
-    # ------------------------------------------------------------------ #
-    def _tick(self, ps: PoolState) -> PoolState:
-        """Advance every HAS_ACTION lane one substep (idle lanes masked)."""
-        busy = ps.phase == HAS_ACTION
-        starting = busy & (ps.progress == 0)
-        # clear accumulators at the start of a step
-        pre = self.benv.v_pre_step(ps.env_states)
-        states = jax.tree.map(
-            lambda p, s: jnp.where(
-                starting.reshape(starting.shape + (1,) * (p.ndim - 1)), p, s
-            ),
-            pre,
-            ps.env_states,
-        )
-        stepped = self.benv.v_substep(states, ps.actions)
-        running = busy & (ps.progress < ps.cost)
-        states = jax.tree.map(
-            lambda n, o: jnp.where(
-                running.reshape(running.shape + (1,) * (n.ndim - 1)), n, o
-            ),
-            stepped,
-            states,
-        )
-        progress = jnp.where(running, ps.progress + 1, ps.progress)
-        finished = busy & (progress >= ps.cost)
-
-        fin_states, fin_ts = self.benv.v_finalize(states, ps.cost)
-        states = jax.tree.map(
-            lambda f, s: jnp.where(
-                finished.reshape(finished.shape + (1,) * (f.ndim - 1)), f, s
-            ),
-            fin_states,
-            states,
-        )
-        return ps.replace(
-            env_states=states,
-            progress=progress,
-            phase=jnp.where(finished, READY, ps.phase),
-            send_tick=jnp.where(finished, ps.tick, ps.send_tick),
-            r_reward=jnp.where(finished, fin_ts.reward, ps.r_reward),
-            r_done=jnp.where(finished, fin_ts.done, ps.r_done),
-            r_term=jnp.where(finished, fin_ts.terminated, ps.r_term),
-            r_trunc=jnp.where(finished, fin_ts.truncated, ps.r_trunc),
-            r_ep_return=jnp.where(finished, fin_ts.episode_return, ps.r_ep_return),
-            r_ep_length=jnp.where(finished, fin_ts.episode_length, ps.r_ep_length),
-            r_cost=jnp.where(finished, ps.cost, ps.r_cost),
-        )
-
-    def _recv_masked(self, ps: PoolState) -> tuple[PoolState, TimeStep]:
-        M = self.batch_size
-
-        def not_enough(s: PoolState):
-            return jnp.sum(s.phase == READY) < M
-
-        ps = lax.while_loop(not_enough, self._tick, ps)
-        # completion order ≈ send_tick order among READY (policy-
-        # independent by the select_ready contract)
-        idx = self.scheduler.select_ready(self._sched_view(ps), M)
-        sel_states = tree_gather(ps.env_states, idx)
-        out = TimeStep(
-            obs=self.benv.v_observe(sel_states),
-            reward=ps.r_reward[idx],
-            done=ps.r_done[idx],
-            terminated=ps.r_term[idx],
-            truncated=ps.r_trunc[idx],
-            env_id=idx,
-            episode_return=ps.r_ep_return[idx],
-            episode_length=ps.r_ep_length[idx],
-            step_cost=ps.r_cost[idx],
-        )
-        ss = self.scheduler.complete(self._sched_view(ps), idx)
-        ps = ps.replace(phase=ss.phase, tick=ss.tick)
-        return self._serve(ps, idx, out)
-
-    # ------------------------------------------------------------------ #
-    # gym-style combined step + reset views
-    # ------------------------------------------------------------------ #
-    def step(self, ps: PoolState, actions: jnp.ndarray, env_ids: jnp.ndarray
-             ) -> tuple[PoolState, TimeStep]:
-        """``step = send ∘ recv`` (paper §3.1)."""
-        return self.recv(self.send(ps, actions, env_ids))
-
-    def reset(self, key: jax.Array) -> tuple[PoolState, TimeStep]:
-        """Sync-style reset: init + drain the first batch of M results."""
-        ps = self.init(key)
-        return self.recv(ps)
-
-    # ------------------------------------------------------------------ #
-    # paper Appendix E: jittable handle API
-    # ------------------------------------------------------------------ #
-    def xla(self, seed: int = 0, key: jax.Array | None = None):
-        """Returns ``(handle, recv, send, step)`` — all jitted pure fns,
-        mirroring EnvPool's ``env.xla()`` (paper Appendix E).  The
-        handle's init key is ``key`` if given, else ``PRNGKey(seed)``
-        (Appendix E seeds the handle; default matches the old
-        hardcoded ``PRNGKey(0)``)."""
-        handle = self.init(jax.random.PRNGKey(seed) if key is None else key)
-        recv = jax.jit(self.recv)
-        send = jax.jit(self.send)
-        step = jax.jit(self.step)
-        return handle, recv, send, step
-
-
-def make_pool(
-    env: Environment,
-    num_envs: int,
-    batch_size: int | None = None,
-    mode: str | None = None,
-    batched: bool | None = None,
-    schedule: str | Scheduler = "fifo",
-    transforms: Any = (),
-) -> DeviceEnvPool:
-    """EnvPool constructor with the paper's mode convention: sync iff
-    batch_size in (None, num_envs)."""
-    if mode is None:
-        mode = "sync" if batch_size in (None, num_envs) else "async"
-    return DeviceEnvPool(env, num_envs, batch_size, mode=mode, batched=batched,
-                         schedule=schedule, transforms=transforms)
+__all__ = [
+    "DeviceEnvPool",
+    "PoolState",
+    "derive_env_keys",
+    "make_pool",
+]

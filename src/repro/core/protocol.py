@@ -9,10 +9,18 @@ the engine is an execution detail, not an API fork.
 
 Two calling conventions exist underneath:
 
-* **functional** engines (device family): pure functions over an
-  explicit ``PoolState`` — ``send(ps, actions, ids) -> ps``,
-  ``recv(ps) -> (ps, TimeStep)``, ``reset(key) -> (ps, TimeStep)`` —
-  jittable, scannable, shardable (paper Appendix E).
+* **functional** engines (the mesh engine, ``core/engine.py``): pure
+  functions over an explicit ``PoolState`` — ``send(ps, actions, ids)
+  -> ps``, ``recv(ps) -> (ps, TimeStep)``, ``reset(key) -> (ps,
+  TimeStep)`` — jittable, scannable, donate-able (paper Appendix E).
+  There is ONE functional engine class (``MeshEnvPool``): its bodies
+  are per-shard pure functions wrapped in ``shard_map`` over a 1-D
+  device mesh, and ``device`` / ``device-masked`` / ``device-sharded``
+  differ only in the mesh (``device`` is the degenerate 1-shard mesh)
+  and execution mode.  ``PoolState`` stays sharded over the mesh for
+  the life of the pool — drivers scan over it without ever pulling it
+  to the host, and ``state_shardings``/``device_put`` expose the
+  layout (``distributed/sharding.py`` rules) for long-lived carries.
 * **host** engines (thread / forloop / subprocess): stateful objects —
   ``send(actions, ids)``, ``recv() -> dict``, ``reset() -> dict``.
 
@@ -48,6 +56,13 @@ the served view of a trajectory — never the underlying env dynamics,
 scheduling, auto-reset points, or ``episode_return`` bookkeeping —
 so engine conformance (identical streams across engines for identical
 seeds/actions) holds for transformed streams exactly as for raw ones.
+Stateful transform pipelines (e.g. ``NormalizeObs`` running moments)
+are checkpointable on the functional engines:
+``save_transform_state``/``restore_transform_state`` round-trip
+``PoolState.tf_state`` through ``checkpoint/store.py`` mesh-elastically
+(global statistics are stored once and re-broadcast to the restoring
+pool's shard count), so preprocessing statistics survive training
+restarts.
 """
 
 from __future__ import annotations

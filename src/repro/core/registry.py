@@ -145,6 +145,13 @@ def make(
     _ensure_defaults()
     tfs = resolve_transforms(transforms, _TRANSFORMS.get(task_id, ()))
     if engine in ("device", "device-masked"):
+        if schedule == "hierarchical":
+            # the cross-shard policy only makes sense with a real mesh;
+            # the degenerate single-device engine keeps rejecting it
+            raise ValueError(
+                "schedule='hierarchical' is the cross-shard policy: it "
+                "needs a device mesh (use engine='device-sharded')"
+            )
         env = _jax_env(task_id, **env_kwargs)
         mode = None if engine == "device" else "masked"
         if mode is None:

@@ -1,253 +1,53 @@
-"""ShardedDeviceEnvPool — multi-device scale-out of the device engine.
+"""``ShardedDeviceEnvPool`` — the mesh engine with all-devices defaults.
 
-The paper's headline numbers come from saturating *all* available
-hardware (1M FPS Atari / 3M FPS MuJoCo on a DGX-A100, §4.1); SRL (Mei et
-al. 2023) shows the same engine parallelism extends across workers.  Here
-the ``PoolState`` pytree of N envs is sharded across a 1-D JAX device
-mesh with ``shard_map``: each of the D shards owns N/D envs and runs its
-own top-(M/D) selection under the pool's ``schedule=`` policy
-(``core/scheduler.py`` — fifo / sjf per-shard, or ``hierarchical``,
-which all-gathers one fixed-size per-shard candidate *cost* matrix so
-every shard applies the same global admission threshold), so
-``init``/``send``/``recv`` execute with **no gathers of env data on the
-hot path** — the only other inter-device traffic is whatever the caller
-does with the concatenated batch (nothing, when the rollout stays in
-``lax.scan``).
+The multi-device engine is not a separate class anymore: the per-method
+``shard_map`` re-wrapping layer (``send_shard``/``recv_shard``/``_smap``
+/``_flatten_batch`` over an inner ``DeviceEnvPool``) was collapsed into
+the single mesh-native core in ``core/engine.py`` — every engine body is
+written once as a per-shard pure function over ``PoolState``, and
+``engine="device"`` vs ``engine="device-sharded"`` differ only in the
+mesh handed to the same class.
 
-Layout: every ``PoolState`` leaf gains a leading shard dim —
-``(D, N/D, ...)`` for env arrays, ``(D,)`` for per-shard scalars — placed
-with ``NamedSharding(mesh, P(axis))`` so each device materializes only
-its own slice.  Batches cross the API boundary flat (``(M, ...)``,
-shard-major order); ``send`` requires batches to stay in the recv
-grouping (the standard ``send(actions, ts.env_id)`` loop preserves it,
-exactly like EnvPool's route-by-env_id contract).
-
-Determinism: per-env init keys are derived from the *global* pool key
-(``split(key, N)`` then reshaped per shard) and sync-mode batches are
-emitted in env-id order, so a sync rollout is bitwise-identical for any
-mesh size — shard count is a pure throughput knob (verified in
-tests/test_sharded_pool.py).
+``ShardedDeviceEnvPool`` survives as the back-compat constructor whose
+``mesh`` defaults to ALL available devices (the historical scale-out
+entry point); it returns a plain ``MeshEnvPool``.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax import lax
-from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core.device_pool import DeviceEnvPool, PoolState, derive_env_keys
-from repro.core.scheduler import get_scheduler
-from repro.core.specs import TimeStep
+from repro.core.engine import ENV_AXIS, MeshEnvPool, make_env_mesh
+from repro.core.scheduler import Scheduler
 from repro.envs.base import Environment
-from repro.utils.pytree import tree_slice
-
-ENV_AXIS = "env"
 
 
-def make_env_mesh(num_shards: int | None = None, axis_name: str = ENV_AXIS
-                  ) -> Mesh:
-    """1-D mesh over the first ``num_shards`` devices (default: all)."""
-    devices = jax.devices()
-    d = num_shards if num_shards is not None else len(devices)
-    if d < 1 or d > len(devices):
-        raise ValueError(
-            f"num_shards={d} not in [1, {len(devices)}] available devices"
-        )
-    return Mesh(np.array(devices[:d]), (axis_name,))
+def ShardedDeviceEnvPool(
+    env: Environment,
+    num_envs: int,
+    batch_size: int | None = None,
+    mode: str | None = None,
+    mesh: Mesh | int | None = None,
+    axis_name: str = ENV_AXIS,
+    aging: float = 1.0,
+    batched: bool | None = None,
+    schedule: str | Scheduler = "fifo",
+    sched_patience: float = 1.0,
+    transforms: Any = (),
+) -> MeshEnvPool:
+    """Back-compat constructor: the unified mesh engine with ``mesh``
+    defaulting to all available devices (paper §4.1 scale-out).  N and M
+    are global; each shard owns N/D envs (N % D == 0, M % D == 0)."""
+    if mesh is None:
+        mesh = make_env_mesh(axis_name=axis_name)
+    return MeshEnvPool(
+        env, num_envs, batch_size, mode=mode, mesh=mesh,
+        axis_name=axis_name, aging=aging, batched=batched,
+        schedule=schedule, sched_patience=sched_patience,
+        transforms=transforms,
+    )
 
 
-def _expand(tree: Any) -> Any:
-    """Add the leading per-shard dim back before leaving shard_map."""
-    return jax.tree.map(lambda x: jnp.expand_dims(x, 0), tree)
-
-
-class ShardedDeviceEnvPool:
-    """``DeviceEnvPool`` sharded over a device mesh (paper §4.1 scale-out).
-
-    ``num_envs`` N and ``batch_size`` M are *global*; each shard runs an
-    inner ``DeviceEnvPool`` with N/D envs and batch M/D.  The public API
-    (``init``/``send``/``recv``/``step``/``reset``/``xla``) matches
-    ``DeviceEnvPool`` so every driver — ``xla_loop`` rollouts, PPO,
-    benchmarks — works unchanged.
-    """
-
-    def __init__(
-        self,
-        env: Environment,
-        num_envs: int,
-        batch_size: int | None = None,
-        mode: str | None = None,
-        mesh: Mesh | int | None = None,
-        axis_name: str = ENV_AXIS,
-        aging: float = 1.0,
-        batched: bool | None = None,
-        schedule: str = "fifo",
-        sched_patience: float = 1.0,
-        transforms: Any = (),
-    ):
-        if batch_size is None:
-            batch_size = num_envs
-        if mode is None:
-            mode = "sync" if batch_size == num_envs else "async"
-        if isinstance(mesh, int):
-            mesh = make_env_mesh(mesh, axis_name)
-        elif mesh is None:
-            mesh = make_env_mesh(axis_name=axis_name)
-        if axis_name not in mesh.shape:
-            raise ValueError(f"mesh has no axis {axis_name!r}: {mesh.shape}")
-        d = int(mesh.shape[axis_name])
-        if num_envs % d:
-            raise ValueError(f"num_envs={num_envs} % num_shards={d}")
-        if batch_size % d:
-            raise ValueError(f"batch_size={batch_size} % num_shards={d}")
-        self.env = env
-        self.spec = env.spec
-        self.num_envs = int(num_envs)
-        self.batch_size = int(batch_size)
-        self.mode = mode
-        self.mesh = mesh
-        self.axis_name = axis_name
-        self.num_shards = d
-        # per-shard bodies drive the SAME batched-native primitives as
-        # the single-device engine (one fused multi-substep per shard
-        # per recv) — sharding is a pure layout transform on top.  The
-        # scheduler is resolved here so ``hierarchical`` gets the mesh
-        # context (its select all-gathers per-shard candidate costs over
-        # ``axis_name`` inside the recv shard_map; fifo/sjf stay
-        # communication-free per-shard policies).
-        self.scheduler = get_scheduler(
-            schedule, aging=aging, axis_name=axis_name, num_shards=d,
-            patience=sched_patience,
-        )
-        # the transform pipeline runs inside the per-shard recv body, so
-        # per-lane transform state shards with the env states and
-        # NormalizeObs merges its moment sums with one fixed-size psum
-        # over ``axis_name`` (statistics only — never env data), keeping
-        # the replicated moments identical on every shard.
-        self.inner = DeviceEnvPool(
-            env, num_envs // d, batch_size // d, mode=mode, aging=aging,
-            batched=batched, schedule=self.scheduler,
-            transforms=transforms, tf_axis=axis_name,
-        )
-        self.pipeline = self.inner.pipeline
-        self.raw_spec = env.spec
-        self.spec = self.inner.spec
-
-    # ------------------------------------------------------------------ #
-    # shard_map plumbing
-    # ------------------------------------------------------------------ #
-    def _smap(self, f, n_in: int):
-        spec = P(self.axis_name)
-        return shard_map(
-            f, mesh=self.mesh, in_specs=(spec,) * n_in, out_specs=spec,
-            check_rep=False,
-        )
-
-    def _flatten_batch(self, tree: Any) -> Any:
-        """(D, M/D, ...) -> (M, ...) shard-major; local merge, no gather."""
-        return jax.tree.map(
-            lambda x: x.reshape((self.batch_size,) + x.shape[2:]), tree
-        )
-
-    def _split_batch(self, tree: Any) -> Any:
-        """(M, ...) shard-major -> (D, M/D, ...)."""
-        d, m = self.num_shards, self.batch_size // self.num_shards
-        return jax.tree.map(lambda x: x.reshape((d, m) + x.shape[1:]), tree)
-
-    # ------------------------------------------------------------------ #
-    # construction / reset
-    # ------------------------------------------------------------------ #
-    def init(self, key: jax.Array) -> PoolState:
-        d, n_local = self.num_shards, self.inner.num_envs
-        # global per-env keys (shared engine formula): shard-count- and
-        # engine-invariant trajectories
-        env_keys, rng = derive_env_keys(key, self.num_envs)
-        env_keys = env_keys.reshape((d, n_local) + env_keys.shape[1:])
-        shard_rngs = jax.random.split(rng, d)
-
-        def init_shard(keys, rng_s):
-            ps = self.inner.init_from_keys(keys[0], rng_s[0])
-            return _expand(ps)
-
-        return self._smap(init_shard, 2)(env_keys, shard_rngs)
-
-    # ------------------------------------------------------------------ #
-    # send / recv — one per-shard top-M/D selection, no gathers
-    # ------------------------------------------------------------------ #
-    def send(self, ps: PoolState, actions: jnp.ndarray, env_ids: jnp.ndarray
-             ) -> PoolState:
-        n_local = self.inner.num_envs
-        actions = self._split_batch(actions)
-        env_ids = self._split_batch(env_ids.astype(jnp.int32))
-
-        def send_shard(ps_s, a, ids):
-            local_ids = ids[0] % n_local     # global id -> shard-local row
-            return _expand(self.inner.send(tree_slice(ps_s, 0), a[0], local_ids))
-
-        return self._smap(send_shard, 3)(ps, actions, env_ids)
-
-    def recv(self, ps: PoolState) -> tuple[PoolState, TimeStep]:
-        n_local = self.inner.num_envs
-
-        def recv_shard(ps_s):
-            ps2, ts = self.inner.recv(tree_slice(ps_s, 0))
-            shard = lax.axis_index(self.axis_name).astype(jnp.int32)
-            ts = ts.replace(env_id=ts.env_id + shard * n_local)
-            if self.mode == "sync":
-                # emit in env-id order: the output stream is then
-                # independent of per-shard top-k cost ordering AND of the
-                # shard count (a shard-local permutation, still no comms)
-                order = jnp.argsort(ts.env_id)
-                ts = jax.tree.map(lambda x: x[order], ts)
-            return _expand(ps2), _expand(ts)
-
-        ps, ts = self._smap(recv_shard, 1)(ps)
-        return ps, self._flatten_batch(ts)
-
-    # ------------------------------------------------------------------ #
-    # gym-style views (same shapes/semantics as DeviceEnvPool)
-    # ------------------------------------------------------------------ #
-    def step(self, ps: PoolState, actions: jnp.ndarray, env_ids: jnp.ndarray
-             ) -> tuple[PoolState, TimeStep]:
-        return self.recv(self.send(ps, actions, env_ids))
-
-    @functools.cached_property
-    def _jit_reset(self):
-        # eager shard_map dispatches op-by-op across the mesh (slow on
-        # CPU sims); one jitted composite keeps reset cheap for callers
-        # that don't wrap the pool themselves
-        return jax.jit(lambda key: self.recv(self.init(key)))
-
-    def reset(self, key: jax.Array) -> tuple[PoolState, TimeStep]:
-        return self._jit_reset(key)
-
-    def xla(self, seed: int = 0, key: jax.Array | None = None):
-        """``(handle, recv, send, step)`` jitted pure fns (paper App. E).
-        ``seed``/``key`` select the handle's init key (default matches
-        the old hardcoded ``PRNGKey(0)``)."""
-        handle = self.init(jax.random.PRNGKey(seed) if key is None else key)
-        return handle, jax.jit(self.recv), jax.jit(self.send), jax.jit(self.step)
-
-    # ------------------------------------------------------------------ #
-    # placement helpers
-    # ------------------------------------------------------------------ #
-    def state_shardings(self, ps: PoolState) -> Any:
-        """Per-leaf ``NamedSharding`` pytree pinning the shard dim to the
-        mesh axis — resolved through the shared logical-axis machinery
-        (``distributed/sharding.py``), so divisibility fallback matches
-        the model layouts.  Pass as ``in_shardings`` hints for long-lived
-        states."""
-        from repro.distributed.sharding import RuleSet, pool_state_shardings
-
-        rules = RuleSet({"env_shard": self.axis_name}, name="envpool")
-        return pool_state_shardings(self.mesh, ps, rules)
-
-    def device_put(self, ps: PoolState) -> PoolState:
-        """Explicitly lay the stacked state out across the mesh."""
-        return jax.tree.map(jax.device_put, ps, self.state_shardings(ps))
+__all__ = ["ENV_AXIS", "ShardedDeviceEnvPool", "make_env_mesh"]

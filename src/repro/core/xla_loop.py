@@ -2,17 +2,23 @@
 
 The paper exposes ``handle, recv, send, step = env.xla()`` so the whole
 collect loop lowers into XLA and runs free of the Python GIL.  For the
-device-family engines the pool already lives on-device, so the actor
-loop is a single ``lax.scan`` — the logical conclusion of Appendix E:
-*zero* host round-trips.  ``ShardedDeviceEnvPool`` keeps the state and
-the batch device-resident per shard, so the scan stays gather-free
-across devices.
+mesh engine (``core/engine.py``) the pool already lives on-device, so
+the actor loop is a single donated-buffer ``lax.scan`` — the logical
+conclusion of Appendix E: *zero* host round-trips, the ``PoolState``
+stays sharded across the mesh for the whole rollout, and donation lets
+XLA reuse the SoA env buffers in place.
 
 ``build_collect_fn`` is engine-agnostic: functional engines get the
 jitted ``lax.scan`` body; host engines (thread / forloop / subprocess)
 get a numpy driver with the SAME signature and the same stacked
 ``(num_steps, batch, ...)`` trajectory layout, so benchmarks and
 training code run unchanged across all six engines.
+
+``build_stepwise_collect_fn`` is the ablation of the scan: one jitted
+``step`` dispatch per env step with the batch materialized on the host
+every step (the classic Appendix-E handle loop WITHOUT the scan).  It
+exists as the baseline for ``bench_throughput.py --resident``, which
+gates that the device-resident scan keeps beating it.
 """
 
 from __future__ import annotations
@@ -94,6 +100,40 @@ def build_collect_fn(
         return None, ts, traj, jnp.stack(acts)
 
     return collect_host
+
+
+def build_stepwise_collect_fn(
+    pool: EnvPool,
+    policy_fn: Callable[[Any, Any, jax.Array], Any],
+    num_steps: int,
+):
+    """Per-step host-driven collect over a functional engine — the SAME
+    signature and trajectory layout as ``build_collect_fn``, but one
+    jitted ``step`` dispatch per env step with the served batch pulled
+    to the host each step (``np.asarray`` on the observations), exactly
+    what a driver that never scans pays.  This is the A/B baseline the
+    ``--resident`` benchmark gate measures the scan loop against."""
+    if not is_functional(pool):
+        raise ValueError("build_stepwise_collect_fn needs a functional "
+                         "(device-family) engine")
+    jit_step = jax.jit(pool.step)
+
+    def collect(ps: PoolState, params: Any, last_ts: TimeStep,
+                key: jax.Array):
+        ts = last_ts
+        steps, acts = [], []
+        for k in jax.random.split(key, num_steps):
+            # the host round-trip the scan loop deletes: the batch is
+            # materialized on the host before the policy runs
+            obs = np.asarray(ts.obs)
+            actions = policy_fn(params, jnp.asarray(obs), k)
+            steps.append(ts)
+            acts.append(actions)
+            ps, ts = jit_step(ps, actions, ts.env_id)
+        traj = tree_stack(steps)
+        return ps, ts, traj, jnp.stack(acts)
+
+    return collect
 
 
 def build_random_collect_fn(pool: DevicePool, num_steps: int):

@@ -295,13 +295,13 @@ def replicated(mesh: Mesh) -> NamedSharding:
 
 
 # --------------------------------------------------------------------- #
-# env-pool sharding (core/sharded_pool.py)
+# env-pool sharding (core/engine.py)
 # --------------------------------------------------------------------- #
-# The ShardedDeviceEnvPool stacks every PoolState leaf with a leading
-# per-shard dim; that dim maps to the pool's mesh axis, everything else
-# replicates.  Expressed through the same RuleSet/resolve machinery as
-# the model layouts so divisibility fallback and axis bookkeeping are
-# shared.
+# The mesh engine partitions every PoolState leaf on its leading dim —
+# (N, ...) per-lane rows and (D, ...) per-shard scalars both map their
+# dim 0 to the pool's mesh axis, everything else replicates.  Expressed
+# through the same RuleSet/resolve machinery as the model layouts so
+# divisibility fallback and axis bookkeeping are shared.
 ENVPOOL_RULES = RuleSet({"env_shard": "env"}, name="envpool")
 
 
@@ -316,6 +316,46 @@ def pool_state_shardings(mesh: Mesh, state_shape: Any,
         return NamedSharding(mesh, resolve(mesh, leaf.shape, names, rules))
 
     return jax.tree.map(one, state_shape)
+
+
+def policy_shardings(
+    mesh: Mesh,
+    params: Any,
+    axis_name: str = "env",
+    min_shard_params: int = 1 << 20,
+) -> Any:
+    """Seed-RL-style policy placement for the device-resident
+    collect/train loop (``rl/ppo.py::train_device``).
+
+    Small nets (< ``min_shard_params`` parameters) are REPLICATED across
+    the env mesh: each shard reads its local copy during the collect
+    scan — zero per-step communication, and the post-update all-reduce
+    is one cheap full-model pass.  Large nets are sharded: each leaf's
+    largest ``axis``-divisible dim is partitioned over ``axis_name`` (the
+    FSDP-over-the-env-mesh layout), trading per-step weight gathers for
+    per-device memory — the Seed-RL configuration for policies too big
+    to replicate.
+
+    Returns a ``NamedSharding`` pytree parallel to ``params``; works on
+    concrete arrays or ``jax.eval_shape`` results.
+    """
+    extent = int(mesh.shape.get(axis_name, 1))
+    leaves = [l for l in jax.tree.leaves(params) if hasattr(l, "shape")]
+    n_params = int(sum(int(np.prod(l.shape)) for l in leaves))
+    shard = extent > 1 and n_params >= min_shard_params
+
+    def one(leaf):
+        if not shard or not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        # largest divisible dim first (the FSDP-ish memory win)
+        for i in sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i]):
+            if leaf.shape[i] % extent == 0 and leaf.shape[i] >= extent:
+                spec = [None] * leaf.ndim
+                spec[i] = axis_name
+                return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, params)
 
 
 def bytes_per_device(tree_shape: Any, shardings: Any, mesh: Mesh) -> int:

@@ -7,11 +7,17 @@ fully-jitted on-device driver, host pools the numpy driver — so the
 same call works over `device`, `device-masked`, `device-sharded`,
 `thread`, `forloop`, and `subprocess`.
 
-  * ``train_device``: fully on-device — collect via the jitted pool
-    (``lax.scan``, paper App. E) and update via jitted PPO epochs; the
-    only host sync per iteration is metrics.  Accepts either
-    ``DeviceEnvPool`` or ``ShardedDeviceEnvPool`` (multi-device collect:
-    the env state stays sharded across the mesh for the whole scan).
+  * ``train_device``: fully device-resident — collect (``lax.scan``
+    over the mesh engine, paper App. E) and the PPO update are ONE
+    jitted, donated-buffer ``train_step``: the ``PoolState`` is donated
+    (``donate_argnums``) so XLA reuses the SoA env buffers in place, it
+    stays sharded across the whole collect+update loop, and it never
+    crosses the host boundary — the only per-iteration host sync is the
+    scalar metrics dict.  Policy parameters are placed by
+    ``distributed/sharding.py::policy_shardings`` rules: replicated
+    across the env mesh for small nets, sharded over it for large ones
+    (Seed-RL style).  Accepts any mesh engine (``engine="device"`` is
+    the degenerate 1-shard mesh).
   * ``train_host``: numpy loop over a host engine (thread / subprocess /
     for-loop) with the SAME jitted update — this is the configuration the
     paper's Figure 4 profiles (env-step vs inference vs train vs other
@@ -126,7 +132,7 @@ def make_ppo_update(net: ActorCritic, cfg: PPOConfig, total_updates: int):
 # fully on-device driver
 # --------------------------------------------------------------------- #
 def train_device(
-    pool: "DeviceEnvPool | Any",   # DeviceEnvPool or ShardedDeviceEnvPool
+    pool: "DeviceEnvPool | Any",   # any mesh engine (device/device-sharded)
     cfg: PPOConfig,
     seed: int = 0,
     log_fn: Callable[[dict], None] | None = None,
@@ -137,6 +143,19 @@ def train_device(
     key, k_init, k_pool = jax.random.split(key, 3)
     params = net.init(k_init)
 
+    # policy placement (distributed/sharding.py): replicated across the
+    # env mesh for small nets, sharded over it for large ones (Seed-RL
+    # style).  The placement commits the params, so the jitted
+    # train_step below inherits it without explicit in_shardings.
+    mesh = getattr(pool, "mesh", None)
+    if mesh is not None:
+        from repro.distributed.sharding import policy_shardings
+
+        placement = policy_shardings(
+            mesh, params, axis_name=getattr(pool, "axis_name", "env")
+        )
+        params = jax.tree.map(jax.device_put, params, placement)
+
     M = pool.batch_size
     steps_per_iter = cfg.num_steps * M
     total_updates = max(
@@ -145,7 +164,12 @@ def train_device(
     opt, update = make_ppo_update(net, cfg, total_updates)
     state = PPOState(params=params, opt=opt.init(params), step=jnp.int32(0))
 
-    def collect(state, ps, ts, key):
+    def train_step(state, ps, ts, kc, ku):
+        """ONE fused collect+update: the rollout scan and the PPO epochs
+        lower into a single XLA program.  ``ps``/``ts`` are donated —
+        the env SoA buffers are updated in place and never leave the
+        mesh; ``ps`` stays sharded through the entire body."""
+
         def one_step(carry, k):
             ps, ts = carry
             a, logp, v, _ = net.sample(state.params, ts.obs, k)
@@ -157,7 +181,7 @@ def train_device(
             }
             return (ps, new_ts), data
 
-        keys = jax.random.split(key, cfg.num_steps)
+        keys = jax.random.split(kc, cfg.num_steps)
         (ps, ts), traj = jax.lax.scan(one_step, (ps, ts), keys)
         _, last_v = net.forward(state.params, ts.obs)
         adv, ret = gae(traj["rewards"], traj["values"], traj["dones"],
@@ -167,29 +191,34 @@ def train_device(
             "logp": traj["logp"], "values": traj["values"],
             "adv": adv, "ret": ret,
         }
-        ep_returns = traj["ep_ret"]
+        state, metrics = update(state, rollout, ku)
+        # episode stats reduced in-graph: only scalars cross to the host
         dones = traj["dones"]
-        return ps, ts, rollout, ep_returns, dones
+        episodes = jnp.sum(dones)
+        ep_sum = jnp.sum(jnp.where(dones, traj["ep_ret"], 0.0))
+        metrics = dict(
+            metrics,
+            episodes=episodes,
+            mean_return=ep_sum / episodes.astype(jnp.float32),  # nan if 0
+        )
+        return state, ps, ts, metrics
 
-    collect = jax.jit(collect, donate_argnums=(1,))
-    update = jax.jit(update, donate_argnums=(0,))
+    train_step = jax.jit(train_step, donate_argnums=(0, 1, 2))
 
     ps, ts = pool.reset(k_pool)
+    if hasattr(pool, "device_put"):
+        ps = pool.device_put(ps)   # pin the env state to the mesh layout
     n_iters = max(1, cfg.total_steps // steps_per_iter)
     history = []
     t0 = time.time()
     for it in range(n_iters):
         key, kc, ku = jax.random.split(key, 3)
-        ps, ts, rollout, ep_returns, dones = collect(state, ps, ts, kc)
-        state, metrics = update(state, rollout, ku)
-        done_mask = np.asarray(dones, bool)
-        rets = np.asarray(ep_returns)[done_mask]
+        state, ps, ts, metrics = train_step(state, ps, ts, kc, ku)
         rec = {
             "iter": it,
             "env_steps": (it + 1) * steps_per_iter,
             "time_s": time.time() - t0,
-            "episodes": int(done_mask.sum()),
-            "mean_return": float(rets.mean()) if rets.size else float("nan"),
+            "episodes": int(metrics.pop("episodes")),
             **{k: float(v) for k, v in metrics.items()},
         }
         history.append(rec)

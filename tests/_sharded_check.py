@@ -125,6 +125,41 @@ def main() -> dict:
     res["hier_deterministic"] = bool(det)
     res["hier_unique_ids"] = bool(uniq_ok)
     res["hier_no_starvation"] = bool(no_starve)
+
+    # 6) mesh-elastic transform-state restore: NormalizeObs moments
+    #    checkpointed at mesh 1 restore onto the mesh-D pool (global
+    #    entries re-broadcast to D identical shard copies, per-lane
+    #    rows passed through) and vice versa
+    import tempfile
+
+    from repro.checkpoint import CheckpointStore
+
+    def norm_pool(shards):
+        pool = make("AntNorm-v3", num_envs=8, engine="device-sharded",
+                    num_shards=shards)
+        ps, ts = pool.reset(jax.random.PRNGKey(7))
+        step = jax.jit(pool.step)
+        for t in range(2):
+            i = np.asarray(ts.env_id)
+            a = jnp.asarray(np.sin(i[:, None] * 0.7 + t + np.arange(8)),
+                            jnp.float32)
+            ps, ts = step(ps, a, ts.env_id)
+        return pool, ps
+
+    store = CheckpointStore(tempfile.mkdtemp())
+    ok = True
+    for d_src, d_dst in ((1, D), (D, 1)):
+        src_pool, src_ps = norm_pool(d_src)
+        src_pool.save_transform_state(store, d_src, src_ps)
+        dst_pool, dst_ps = norm_pool(d_dst)
+        dst_ps = dst_pool.restore_transform_state(store, d_src, dst_ps)
+        src_c = jax.tree.map(np.asarray, src_pool._tf_canonical(src_ps.tf_state))
+        dst_m = jax.tree.map(np.asarray, dst_ps.tf_state[0])
+        for k in ("count", "mean", "m2"):
+            ok &= dst_m[k].shape[0] == d_dst
+            for s in range(d_dst):          # every shard copy == source
+                ok &= bool(np.array_equal(src_c[0][k], dst_m[k][s]))
+    res["tf_restore_elastic"] = bool(ok)
     return res
 
 

@@ -72,3 +72,63 @@ def test_preemption_flag(tmp_path):
     assert not store.preempted.is_set()
     store.preempted.set()
     assert store.preempted.is_set()
+
+
+# --------------------------------------------------------------------- #
+# transform-state checkpointing (ROADMAP transforms open item):
+# NormalizeObs running moments must survive a training restart
+# --------------------------------------------------------------------- #
+def _ant_actions(ids, t):
+    return jnp.asarray(
+        np.sin(np.asarray(ids)[:, None] * 0.7 + t * 0.3
+               + np.arange(8)[None, :]),
+        jnp.float32,
+    )
+
+
+def _run_steps(pool, ps, ts, start, steps):
+    step = jax.jit(pool.step)
+    obs = []
+    for t in range(start, start + steps):
+        ps, ts = step(ps, _ant_actions(ts.env_id, t), ts.env_id)
+        obs.append(np.asarray(ts.obs))
+    return ps, ts, np.stack(obs)
+
+
+def test_normalize_obs_moments_checkpoint_roundtrip(tmp_path):
+    """Restore-then-continue must be bitwise-identical to never having
+    restarted: the moments round-trip ``checkpoint/store.py`` exactly,
+    and a fresh pool that restores them serves the same normalized
+    stream as the original pool continuing in memory."""
+    import repro
+
+    store = CheckpointStore(str(tmp_path))
+    key = jax.random.PRNGKey(0)
+
+    pool = repro.make("AntNorm-v3", num_envs=4, seed=0)
+    ps, ts = pool.reset(key)
+    ps, ts, _ = _run_steps(pool, ps, ts, 0, 4)       # accumulate moments
+    pool.save_transform_state(store, 4, ps)
+
+    # the restart: a fresh pool re-resets its envs (fresh episodes),
+    # but the preprocessing statistics come back from the checkpoint
+    pool2 = repro.make("AntNorm-v3", num_envs=4, seed=0)
+    ps2, ts2 = pool2.reset(key)
+    fresh_tf = ps2.tf_state
+    ps2 = pool2.restore_transform_state(store, 4, ps2)
+    for a, b in zip(jax.tree.leaves(ps.tf_state),
+                    jax.tree.leaves(ps2.tf_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # continue both from identical env states: in-memory moments vs
+    # restored moments must emit the SAME stream, bitwise
+    ps_mem = ps2.replace(tf_state=ps.tf_state)
+    _, _, stream_mem = _run_steps(pool2, ps_mem, ts2, 4, 3)
+    _, _, stream_res = _run_steps(pool2, ps2, ts2, 4, 3)
+    np.testing.assert_array_equal(stream_mem, stream_res)
+
+    # and the restore is load-bearing: zeroed (fresh) moments diverge
+    _, _, stream_fresh = _run_steps(
+        pool2, ps2.replace(tf_state=fresh_tf), ts2, 4, 3
+    )
+    assert not np.array_equal(stream_res, stream_fresh)

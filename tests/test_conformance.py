@@ -175,6 +175,76 @@ def test_fifo_bitwise_matches_pre_refactor_golden(tag, engine, n, m, kw):
     np.testing.assert_array_equal(obs, GOLDEN[f"{tag}_obs"])
 
 
+@pytest.mark.parametrize("tag,n,m", [
+    ("device_sync", 8, None),
+    ("device_async", 8, 4),
+])
+def test_unified_engine_mesh1_sharded_matches_device_goldens(tag, n, m):
+    """The engine-unification contract: ``device-sharded`` at mesh 1 is
+    the SAME class over the SAME degenerate mesh as ``device``, so it
+    must reproduce the device goldens bitwise — including sync emission
+    order (no per-shard canonicalization on the 1-shard mesh)."""
+    ids, rew, done, obs = golden_device_stream(
+        "device-sharded", n, m, num_shards=1
+    )
+    np.testing.assert_array_equal(ids, GOLDEN[f"{tag}_ids"])
+    np.testing.assert_array_equal(rew, GOLDEN[f"{tag}_rew"])
+    np.testing.assert_array_equal(done, GOLDEN[f"{tag}_done"])
+    np.testing.assert_array_equal(obs, GOLDEN[f"{tag}_obs"])
+
+
+def test_unified_engine_mesh1_sharded_matches_atari_golden():
+    """Same unification check on the second golden: the default-pipeline
+    Pong stream (FrameStack(4) fused in-engine, variable frameskip cost
+    — emission order is NOT env-id-sorted at steps 8/20, which pins
+    that mesh-1 keeps the classic priority order)."""
+    golden = np.load(
+        os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                     "golden_atari_stream.npz")
+    )
+    pool = make("Pong-v5", num_envs=4, engine="device-sharded",
+                num_shards=1, seed=SEED)
+    ps, ts = pool.reset(jax.random.PRNGKey(SEED))
+    step = jax.jit(pool.step)
+    recs = []
+    for t in range(32):
+        i = np.asarray(ts.env_id)
+        a = jnp.asarray(((i * 3 + t) % 6).astype(np.int32))
+        ps, ts = step(ps, a, ts.env_id)
+        recs.append((np.asarray(ts.env_id), np.asarray(ts.reward),
+                     np.asarray(ts.done), np.asarray(ts.step_cost),
+                     np.asarray(ts.obs)))
+    ids, rew, done, cost, obs = (np.stack(x) for x in zip(*recs))
+    np.testing.assert_array_equal(ids, golden["ids"])
+    np.testing.assert_array_equal(rew, golden["rew"])
+    np.testing.assert_array_equal(done, golden["done"])
+    np.testing.assert_array_equal(cost, golden["cost"])
+    np.testing.assert_array_equal(obs, golden["obs_stack"])
+
+
+def test_scanned_collect_donates_pool_state():
+    """The device-resident collect contract: the donated ``lax.scan``
+    must hand the PoolState SoA buffers to XLA (donate_argnums) instead
+    of retaining stale copies — every input leaf is invalidated by the
+    call, so the rollout carries exactly one live PoolState."""
+    from repro.core.xla_loop import build_random_collect_fn
+
+    pool = make(TASK, num_envs=N, seed=SEED)
+    collect = build_random_collect_fn(pool, num_steps=4)
+    ps, ts = pool.reset(jax.random.PRNGKey(SEED))
+    stale = jax.tree.leaves(ps)
+    ps2, ts2, traj, _ = collect(ps, None, ts, jax.random.PRNGKey(1))
+    assert all(leaf.is_deleted() for leaf in stale), (
+        "scanned collect retained stale PoolState buffers"
+    )
+    # the returned state is live and usable (the buffers were reused,
+    # not lost) — one more step must run off it
+    ps3, ts3 = jax.jit(pool.step)(
+        ps2, jnp.zeros((N,), jnp.int32), ts2.env_id
+    )
+    assert np.isfinite(np.asarray(ts3.reward)).all()
+
+
 def test_fifo_thread_matches_pre_refactor_golden():
     """Thread engine (M == N, batches env-id-sorted: block composition
     is timing-dependent, per-env streams are not)."""

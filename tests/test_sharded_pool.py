@@ -127,3 +127,6 @@ def test_multi_shard_invariance_subprocess():
     assert res["hier_deterministic"], res
     assert res["hier_unique_ids"], res
     assert res["hier_no_starvation"], res
+    # NormalizeObs moments checkpointed at mesh 1 restore onto mesh D
+    # (and back): global entries re-broadcast to identical shard copies
+    assert res["tf_restore_elastic"], res

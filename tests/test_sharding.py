@@ -132,3 +132,36 @@ def test_collective_parser():
 def test_sp_rules_shard_seq():
     assert SP_RULES.get("seq") == "model"
     assert BASELINE_RULES.get("seq") is None
+
+
+def test_policy_shardings_replicates_small_and_shards_large():
+    """Seed-RL placement for the device-resident PPO loop: small policy
+    nets replicate over the env mesh, large ones shard their largest
+    divisible dim; never a divisibility compile error."""
+    import numpy as _np
+
+    from repro.distributed.sharding import policy_shardings
+
+    devs = jax.devices() * 4
+    mesh = jax.sharding.Mesh(_np.array(devs[:4]), ("env",))
+
+    small = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((32,))}
+    sh = policy_shardings(mesh, small, axis_name="env")
+    assert all(s.spec == P() for s in jax.tree.leaves(
+        sh, is_leaf=lambda x: hasattr(x, "spec")))
+
+    big = {
+        "w": jax.ShapeDtypeStruct((2048, 1024), jnp.float32),
+        "b": jax.ShapeDtypeStruct((1024,), jnp.float32),
+        "odd": jax.ShapeDtypeStruct((7, 3), jnp.float32),   # indivisible
+    }
+    sh = policy_shardings(mesh, big, axis_name="env")
+    assert sh["w"].spec == P("env", None)
+    assert sh["b"].spec == P("env")
+    assert sh["odd"].spec == P()          # divisibility fallback
+
+    # the degenerate 1-shard mesh always replicates
+    mesh1 = jax.sharding.Mesh(_np.array(jax.devices()[:1]), ("env",))
+    sh = policy_shardings(mesh1, big, axis_name="env")
+    assert all(s.spec == P() for s in jax.tree.leaves(
+        sh, is_leaf=lambda x: hasattr(x, "spec")))

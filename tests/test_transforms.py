@@ -350,14 +350,20 @@ def test_normalize_obs_device_vs_thread():
         pool = make("AntNorm-v3", num_envs=4, seed=SEED)
         ps, ts = pool.reset(jax.random.PRNGKey(SEED))
         step = jax.jit(pool.step)
-        recs = []
+        recs, variances = [], []
         for t in range(steps):
             i = np.asarray(ts.env_id)
             recs.append(np.asarray(ts.obs)[np.argsort(i)])
+            # the running variance that normalized THIS block (the
+            # moments on ps include the block, per the apply contract)
+            # — identifies the degenerate dims whose normalizer is
+            # sqrt(eps)-sized at this step
+            m = jax.tree.map(np.asarray, ps.tf_state[0])
+            variances.append(np.maximum(m["m2"][0] / m["count"][0], 0.0))
             a = jnp.asarray(np.sin(i[:, None] * 0.7 + t * 0.3
                                    + np.arange(8)[None, :]), jnp.float32)
             ps, ts = step(ps, a, ts.env_id)
-        return recs
+        return recs, variances
 
     def host(steps=5):
         pool = make("AntNorm-v3", num_envs=4, engine="thread", seed=SEED,
@@ -376,9 +382,24 @@ def test_normalize_obs_device_vs_thread():
         finally:
             pool.close()
 
-    for t, (a, b) in enumerate(zip(dev(), host())):
-        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5,
-                                   err_msg=f"step {t}")
+    recs, variances = dev()
+    # well-conditioned dims keep the tight tolerance; degenerate dims
+    # (running variance ~ 0 at that step, so the normalizer is
+    # sqrt(eps)-sized and a single f32 reassociation ulp in m2 — jit
+    # fusion vs the numpy mirror's op order — amplifies ~1e4x into the
+    # output) get a proportionally looser absolute bound
+    checked_loose = False
+    for t, (a, b, var) in enumerate(zip(recs, host(), variances)):
+        tight = var > 1e-6
+        assert tight.any()
+        checked_loose |= bool((~tight).any())
+        np.testing.assert_allclose(a[:, tight], b[:, tight],
+                                   rtol=1e-4, atol=1e-5,
+                                   err_msg=f"step {t} (well-conditioned)")
+        np.testing.assert_allclose(a[:, ~tight], b[:, ~tight],
+                                   rtol=1e-4, atol=1e-3,
+                                   err_msg=f"step {t} (degenerate-var)")
+    assert checked_loose   # the degenerate regime was actually exercised
 
 
 def test_transform_mesh_conformance_subprocess():
