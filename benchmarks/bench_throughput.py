@@ -34,6 +34,18 @@ mesh 1 and ``--mesh`` D, writing ``BENCH_resident.json``;
 mesh=D — the acceptance check that the PPO-style scan loop keeps its
 zero-host-round-trip advantage.
 
+``--pipelined`` A/Bs the pipelined collect/train driver
+(``rl/ppo.py::train_pipelined``: collect scan and learner update as two
+concurrently-dispatched programs, rollout one policy step stale,
+V-trace corrected) against the fused-serial ``train_device`` (one XLA
+program, collect and update serialized — and the update replicated
+across every mesh shard) at mesh 1 and ``--mesh`` D, reporting steady-
+state wall-clock per update; ``--min-pipelined-ratio`` gates CI on
+fused/pipelined time per update at mesh=D.  Both drivers train the
+same TokenEnv policy, and the summary records each side's final
+``mean_return`` so reward parity under the lag correction is visible
+in the artifact.  Writes ``BENCH_pipelined.json``.
+
 ``--transforms`` A/Bs the in-engine transform pipeline
 (``core/transforms.py``, fused into the jitted recv) against the
 classic python-wrapper placement (raw pool + the numpy mirror applied
@@ -320,6 +332,72 @@ def run_resident(mesh: int, task: str = "TokenCopy-v0",
     return rows, summary
 
 
+def bench_train_driver(task: str, pipelined: bool, envs_per_shard: int,
+                       shards: int, num_steps: int = 16, iters: int = 5,
+                       ) -> tuple[float, float]:
+    """(steady-state seconds per update, final mean_return) for one
+    training driver: the fused-serial ``train_device`` program or the
+    pipelined two-program driver, same task/policy/sizes.  The first
+    iteration (compile) is excluded from the timing."""
+    import jax
+
+    from repro.core.registry import make
+    from repro.rl.ppo import PPOConfig, train_device, train_pipelined
+
+    n = envs_per_shard * shards
+    pool = make(task, num_envs=n, engine="device-sharded",
+                num_shards=shards)
+    cfg = PPOConfig(total_steps=n * num_steps * iters, num_steps=num_steps,
+                    minibatches=4, epochs=4)
+    train = train_pipelined if pipelined else train_device
+    _, _, hist = train(pool, cfg, seed=0, hidden=(64, 64))
+    if len(hist) < 2:
+        raise RuntimeError("need >= 2 iterations to time steady state")
+    per_update = (hist[-1]["time_s"] - hist[0]["time_s"]) / (len(hist) - 1)
+    return per_update, hist[-1]["mean_return"]
+
+
+def run_pipelined(mesh: int, task: str = "TokenCopy-v0",
+                  envs_per_shard: int = 16, num_steps: int = 16,
+                  iters: int = 5) -> tuple[list[str], dict]:
+    """Pipelined vs fused-serial training A/B at mesh 1 and D (see
+    --pipelined).  At mesh=D the fused program pays the PPO epochs D
+    times (replicated across every shard) and serializes them after the
+    collect scan; the pipelined driver pays them once on the learner
+    device while the env mesh collects the next rollout behind the
+    stale params — the gate pins that structural win."""
+    rows: list[str] = []
+    out: dict[str, dict[str, float]] = {}
+    for d in sorted({1, mesh}):
+        fused_s, fused_ret = bench_train_driver(
+            task, False, envs_per_shard, d, num_steps, iters)
+        pipe_s, pipe_ret = bench_train_driver(
+            task, True, envs_per_shard, d, num_steps, iters)
+        ratio = fused_s / max(pipe_s, 1e-9)
+        out[str(d)] = {
+            "fused_s_per_update": fused_s,
+            "pipelined_s_per_update": pipe_s,
+            "speedup": ratio,
+            "fused_mean_return": fused_ret,
+            "pipelined_mean_return": pipe_ret,
+        }
+        rows.append(f"pipelined_{task}_fused_mesh{d},"
+                    f"{fused_s * 1e3:.1f},ms/update fused-serial")
+        rows.append(f"pipelined_{task}_pipelined_mesh{d},"
+                    f"{pipe_s * 1e3:.1f},ms/update pipelined+vtrace")
+        rows.append(f"pipelined_{task}_SPEEDUP_mesh{d},{ratio:.3f},"
+                    f"fused/pipelined wall-clock per update")
+    summary = {
+        "task": task,
+        "mesh": mesh,
+        "envs_per_shard": envs_per_shard,
+        "num_steps": num_steps,
+        "per_mesh": out,
+        "gate_ratio": out[str(mesh)]["speedup"],
+    }
+    return rows, summary
+
+
 def bench_transform_placement(task: str, num_envs: int, steps: int,
                               iters: int, wrapper: bool) -> float:
     """FPS of one preprocessing placement: ``wrapper=False`` runs the
@@ -471,6 +549,14 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--min-resident-ratio", type=float, default=0.0,
                     help="fail (exit 1) if resident/host-driven FPS at "
                          "mesh=D drops below this (CI gate)")
+    ap.add_argument("--pipelined", action="store_true",
+                    help="pipelined vs fused-serial collect/train A/B "
+                         "(rl/ppo.py: train_pipelined vs train_device) at "
+                         "mesh 1 and --mesh (default 4); writes "
+                         "BENCH_pipelined.json")
+    ap.add_argument("--min-pipelined-ratio", type=float, default=0.0,
+                    help="fail (exit 1) if fused/pipelined wall-clock per "
+                         "update at mesh=D drops below this (CI gate)")
     ap.add_argument("--transforms", action="store_true",
                     help="in-engine transform pipeline vs python-wrapper "
                          "A/B on PongStack-v5; writes BENCH_transforms.json")
@@ -493,20 +579,28 @@ def main(argv: list[str] | None = None) -> int:
 
     rows: list[str] = []
     extra: dict = {}
-    if args.mesh or args.schedule or args.resident:
+    if args.mesh or args.schedule or args.resident or args.pipelined:
         mesh = args.mesh or 4
         # must precede ANY jax import in this process
         if "jax" in sys.modules:
             raise RuntimeError(
-                "--mesh/--schedule/--resident require jax to not be "
-                "imported yet"
+                "--mesh/--schedule/--resident/--pipelined require jax to "
+                "not be imported yet"
             )
         flags = os.environ.get("XLA_FLAGS", "")
         if "host_platform_device_count" not in flags:
             os.environ["XLA_FLAGS"] = (
                 f"{flags} --xla_force_host_platform_device_count={mesh}"
             ).strip()
-    if args.resident:
+    if args.pipelined:
+        if args.smoke:
+            args.envs_per_shard, args.steps, args.iters = 16, 16, 4
+        rows, summary = run_pipelined(mesh, args.task, args.envs_per_shard,
+                                      args.steps, args.iters)
+        extra = {"mode": "pipelined", "pipelined": summary}
+        if args.json is None:
+            args.json = os.path.join(ROOT, "BENCH_pipelined.json")
+    elif args.resident:
         if args.smoke:
             args.envs_per_shard, args.steps, args.iters = 16, 16, 1
         rows, summary = run_resident(mesh, args.task, args.envs_per_shard,
@@ -561,6 +655,15 @@ def main(argv: list[str] | None = None) -> int:
                   f"{args.min_ab_ratio}")
             return 1
         print(f"[bench] ratio {ratio:.3f} >= {args.min_ab_ratio} OK")
+    if extra.get("mode") == "pipelined" and args.min_pipelined_ratio > 0:
+        ratio = extra["pipelined"]["gate_ratio"]
+        d = extra["pipelined"]["mesh"]
+        if ratio < args.min_pipelined_ratio:
+            print(f"[bench] FAIL: fused/pipelined per-update ratio "
+                  f"{ratio:.3f} < {args.min_pipelined_ratio} at mesh={d}")
+            return 1
+        print(f"[bench] fused/pipelined per-update ratio {ratio:.3f} >= "
+              f"{args.min_pipelined_ratio} at mesh={d} OK")
     if extra.get("mode") == "resident" and args.min_resident_ratio > 0:
         ratio = extra["resident"]["gate_ratio"]
         d = extra["resident"]["mesh"]

@@ -38,6 +38,18 @@ if [ -z "${CI_SKIP_BENCH:-}" ]; then
     python benchmarks/bench_throughput.py --resident --smoke \
         --min-resident-ratio 1.2
 
+    echo "== pipelined vs fused-serial collect/train A/B (mesh 1 and 4) =="
+    # the pipelined-driver gate: collect and update as two concurrently
+    # dispatched programs (rollout one policy step stale, V-trace
+    # corrected) must beat the fused-serial train_device program's
+    # wall-clock per update at mesh=4, where the fused path both
+    # serializes the phases and replicates the PPO epochs on every
+    # shard (typical ~2x on 1-core CI; 1.5 is the acceptance floor).
+    # Writes BENCH_pipelined.json (incl. both sides' mean_return for
+    # the reward-parity check).
+    python benchmarks/bench_throughput.py --pipelined --smoke \
+        --min-pipelined-ratio 1.5
+
     echo "== transform-pipeline conformance (device/sharded mesh 1,2,4/thread) =="
     # the in-engine pipeline's engine-conformance + golden-pin tests
     # (also part of tier-1 above; re-run standalone so a bench-only CI

@@ -8,15 +8,43 @@ the GIL) while a mutex guards the few compound updates.  What matters for
 the engine comparison is what the paper highlights: **zero-copy batching**
 — workers write observations straight into the pre-allocated output block
 and ownership of a full block transfers to the consumer without a copy.
+
+Since the pipelined-driver PR these queues are on a hot path:
+``StateBufferQueue`` is the host-side hand-off structure of
+``rl/ppo.py::train_host_pipelined`` — the actor thread streams each
+served batch into the pre-allocated ring with ``put_batch`` while the
+learner thread ``take``s whole blocks, so env stepping and the PPO/
+V-trace update overlap instead of serializing.  That made the latent
+overflow semantics load-bearing, so both queues now enforce **bounded
+occupancy with blocking backpressure**: a producer that gets more than
+the ring capacity ahead of the consumer blocks (or raises
+``TimeoutError`` with a ``timeout=``) instead of silently overwriting
+unconsumed slots — the actor can never clobber a rollout the learner
+has not taken yet, which also bounds its policy lag.
 """
 
 from __future__ import annotations
 
 import itertools
 import threading
+import time
 from typing import Any
 
 import numpy as np
+
+
+def _acquire_many(sem: threading.Semaphore, n: int,
+                  timeout: float | None, what: str) -> None:
+    """Acquire ``n`` permits or none: on timeout the partial acquisition
+    is rolled back and TimeoutError raised, so a failed put leaves the
+    queue state untouched."""
+    deadline = None if timeout is None else time.monotonic() + timeout
+    for i in range(n):
+        left = None if deadline is None else max(0.0, deadline - time.monotonic())
+        ok = sem.acquire() if left is None else sem.acquire(timeout=left)
+        if not ok:
+            sem.release(i) if i else None
+            raise TimeoutError(f"{what}: queue full (backpressure timeout)")
 
 
 class ActionBufferQueue:
@@ -24,7 +52,10 @@ class ActionBufferQueue:
 
     Capacity 2N as in the paper (App. D.1): at most N outstanding actions
     plus headroom; two monotonic counters track head/tail, a semaphore
-    coordinates producers/consumers.
+    coordinates producers/consumers.  A second semaphore counts FREE
+    slots: ``put_batch`` blocks (backpressure) when more than 2N items
+    would be outstanding, so the ring can never wrap onto unconsumed
+    slots.
     """
 
     def __init__(self, num_envs: int):
@@ -33,9 +64,23 @@ class ActionBufferQueue:
         self._head = itertools.count()   # dequeue positions
         self._tail = itertools.count()   # enqueue positions
         self._lock = threading.Lock()
-        self._sem = threading.Semaphore(0)
+        self._sem = threading.Semaphore(0)             # filled slots
+        self._free = threading.Semaphore(self._capacity)  # empty slots
 
-    def put_batch(self, items: list[Any]) -> None:
+    def put_batch(self, items: list[Any], timeout: float | None = None) -> None:
+        """Enqueue ``items``; blocks while the ring lacks free slots
+        (``timeout=`` turns the block into TimeoutError).  An empty batch
+        is a no-op — ``Semaphore.release(0)`` raises ValueError in
+        CPython, and an env pool legitimately produces empty sends (e.g.
+        an async recv served zero lanes of one shard)."""
+        if not items:
+            return
+        if len(items) > self._capacity:
+            raise ValueError(
+                f"put_batch of {len(items)} items exceeds queue capacity "
+                f"{self._capacity} (2 * num_envs) — it could never complete"
+            )
+        _acquire_many(self._free, len(items), timeout, "ActionBufferQueue")
         with self._lock:
             for item in items:
                 self._buf[next(self._tail) % self._capacity] = item
@@ -48,6 +93,7 @@ class ActionBufferQueue:
             idx = next(self._head) % self._capacity
             item = self._buf[idx]
             self._buf[idx] = None
+        self._free.release()
         return item
 
 
@@ -72,11 +118,27 @@ class _Block:
         self.ready.clear()
         self._done = itertools.count()
 
+    def _mark_done(self, n: int) -> None:
+        last = 0
+        for _ in range(n):
+            last = next(self._done)
+        if last == self.batch - 1:
+            self.ready.set()
+
     def write(self, slot: int, values: dict[str, Any]) -> None:
         for name, v in values.items():
             self.arrays[name][slot] = v
-        if next(self._done) == self.batch - 1:
-            self.ready.set()
+        self._mark_done(1)
+
+    def write_slice(self, lo: int, values: dict[str, Any]) -> None:
+        """Write a contiguous run of slots in one numpy slice assignment
+        (zero-copy batching: the batch lands straight in the block)."""
+        n = 0
+        for name, v in values.items():
+            v = np.asarray(v)
+            n = v.shape[0]
+            self.arrays[name][lo:lo + n] = v
+        self._mark_done(n)
 
 
 class StateBufferQueue:
@@ -86,6 +148,14 @@ class StateBufferQueue:
     counter; slot ``k`` lands in block ``(k // M) % num_blocks`` at offset
     ``k % M``.  A block whose M slots are written flips its ready event;
     ``take()`` consumes blocks in allocation order and recycles them.
+
+    Occupancy is bounded: a free-slot semaphore makes ``acquire_slot`` /
+    ``put_batch`` block once ``num_blocks * batch`` slots are outstanding
+    (the consumer's ``take`` returns permits), so a fast producer can
+    never wrap onto a block the consumer has not taken — the invariant
+    the pipelined PPO driver relies on for bounded policy lag.
+    ``put_batch`` is the batched producer API: one slice assignment per
+    block it lands in, splitting across the ring boundary as needed.
     """
 
     def __init__(
@@ -100,11 +170,38 @@ class StateBufferQueue:
         self.num_blocks = max(2, -(-num_envs // batch_size) + 1)
         self._blocks = [_Block(fields, batch_size) for _ in range(self.num_blocks)]
         self._alloc = itertools.count()
+        self._alloc_lock = threading.Lock()
         self._take_head = 0
+        self._free = threading.Semaphore(self.num_blocks * self.batch)
 
-    def acquire_slot(self) -> tuple[_Block, int]:
-        k = next(self._alloc)
+    def acquire_slot(self, timeout: float | None = None) -> tuple[_Block, int]:
+        _acquire_many(self._free, 1, timeout, "StateBufferQueue")
+        with self._alloc_lock:
+            k = next(self._alloc)
         return self._blocks[(k // self.batch) % self.num_blocks], k % self.batch
+
+    def put_batch(self, values: dict[str, Any],
+                  timeout: float | None = None) -> None:
+        """Write a whole ``(m, ...)``-leading batch of rows in allocation
+        order; blocks under backpressure like ``acquire_slot``.  Rows
+        land contiguously (one slice write per block spanned)."""
+        arrs = {name: np.asarray(v) for name, v in values.items()}
+        m = next(iter(arrs.values())).shape[0] if arrs else 0
+        if m == 0:
+            return
+        _acquire_many(self._free, m, timeout, "StateBufferQueue")
+        with self._alloc_lock:
+            k0 = next(self._alloc)
+            for _ in range(m - 1):
+                next(self._alloc)
+        off = 0
+        while off < m:
+            k = k0 + off
+            blk = self._blocks[(k // self.batch) % self.num_blocks]
+            lo = k % self.batch
+            run = min(self.batch - lo, m - off)
+            blk.write_slice(lo, {n: v[off:off + run] for n, v in arrs.items()})
+            off += run
 
     def take(self, timeout: float | None = None) -> dict[str, np.ndarray]:
         blk = self._blocks[self._take_head % self.num_blocks]
@@ -113,4 +210,5 @@ class StateBufferQueue:
         out = blk.arrays  # ownership transfer — no copy
         blk.alloc()       # fresh storage for the recycled block
         self._take_head += 1
+        self._free.release(self.batch)
         return out

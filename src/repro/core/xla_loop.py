@@ -19,6 +19,16 @@ training code run unchanged across all six engines.
 every step (the classic Appendix-E handle loop WITHOUT the scan).  It
 exists as the baseline for ``bench_throughput.py --resident``, which
 gates that the device-resident scan keeps beating it.
+
+``build_pipelined_collect_fn`` is the double-buffer sibling: the same
+donated scan, but returning a flat *rollout dict* (obs / actions /
+behavior logp / rewards / dones / episode returns / bootstrap obs) —
+the hand-off layout ``rl/ppo.py::train_pipelined`` dispatches
+concurrently with the learner's update program, and the device twin of
+the ``StateBufferQueue`` block layout the host pipeline streams.  Its
+``policy_fn`` must return ``(actions, logp)``: the behavior log-prob is
+recorded at collect time so the one-step-stale rollout can be V-trace
+corrected (``rl/vtrace.py``) by the learner.
 """
 
 from __future__ import annotations
@@ -134,6 +144,55 @@ def build_stepwise_collect_fn(
         return ps, ts, traj, jnp.stack(acts)
 
     return collect
+
+
+def build_pipelined_collect_fn(
+    pool: EnvPool,
+    policy_fn: Callable[[Any, Any, jax.Array], tuple[Any, Any]],
+    num_steps: int,
+    donate: bool = True,
+):
+    """Returns ``collect(ps, params, last_ts, key) -> (ps, last_ts,
+    rollout)`` — the collect half of the pipelined driver.
+
+    ``rollout`` is a flat dict of stacked ``(num_steps, batch, ...)``
+    leaves: ``obs``, ``actions``, ``logp`` (the BEHAVIOR policy's
+    log-prob, recorded at collect time), ``rewards``, ``dones``,
+    ``ep_ret``, plus ``last_obs`` ``(batch, ...)`` for the learner's
+    bootstrap value.  ``policy_fn(params, obs, key) -> (actions, logp)``
+    must be jit-traceable.
+
+    ``ps`` and ``last_ts`` are donated by default: the driver dispatches
+    one ``collect`` per iteration and carries both forward, so XLA
+    reuses the SoA env buffers in place exactly like the fused path —
+    the rollout itself is a FRESH buffer each call, which is what lets
+    two of them be in flight at once (double buffering)."""
+    if not is_functional(pool):
+        raise ValueError("build_pipelined_collect_fn needs a functional "
+                         "(device-family) engine")
+
+    def one_step(carry, key):
+        ps, ts, params = carry
+        actions, logp = policy_fn(params, ts.obs, key)
+        ps, new_ts = pool.step(ps, actions, ts.env_id)
+        data = {
+            "obs": ts.obs, "actions": actions, "logp": logp,
+            "rewards": new_ts.reward, "dones": new_ts.done,
+            "ep_ret": new_ts.episode_return,
+        }
+        return (ps, new_ts, params), data
+
+    def collect(ps: PoolState, params: Any, last_ts: TimeStep,
+                key: jax.Array):
+        keys = jax.random.split(key, num_steps)
+        (ps, last_ts, _), rollout = lax.scan(
+            one_step, (ps, last_ts, params), keys
+        )
+        rollout["last_obs"] = last_ts.obs
+        return ps, last_ts, rollout
+
+    kwargs = {"donate_argnums": (0, 2)} if donate else {}
+    return jax.jit(collect, **kwargs)
 
 
 def build_random_collect_fn(pool: DevicePool, num_steps: int):

@@ -1,6 +1,15 @@
 from repro.rl.gae import gae
 from repro.rl.nets import ActorCritic
-from repro.rl.ppo import PPOConfig, train, train_device, train_host
+from repro.rl.ppo import (
+    PPOConfig,
+    train,
+    train_device,
+    train_host,
+    train_host_pipelined,
+    train_pipelined,
+)
+from repro.rl.vtrace import VTraceReturns, vtrace
 
-__all__ = ["ActorCritic", "PPOConfig", "gae", "train", "train_device",
-           "train_host"]
+__all__ = ["ActorCritic", "PPOConfig", "VTraceReturns", "gae", "train",
+           "train_device", "train_host", "train_host_pipelined",
+           "train_pipelined", "vtrace"]

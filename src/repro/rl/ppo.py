@@ -18,15 +18,50 @@ same call works over `device`, `device-masked`, `device-sharded`,
     across the env mesh for small nets, sharded over it for large ones
     (Seed-RL style).  Accepts any mesh engine (``engine="device"`` is
     the degenerate 1-shard mesh).
+  * ``train_pipelined``: the PIPELINED device driver (Sample Factory's
+    no-idle-hardware argument / Seed-RL's actor-learner split).  The
+    fused ``train_device`` program serializes collect and update — the
+    env mesh idles during the PPO epochs and the learner idles during
+    the rollout scan.  ``train_pipelined`` splits them into TWO jitted
+    programs dispatched concurrently each iteration: the collect scan
+    (``core/xla_loop.py::build_pipelined_collect_fn``, PoolState and
+    TimeStep donated, env state sharded over the mesh) runs behind the
+    *previous* params while the single-device learner program consumes
+    the previous rollout — double buffering: two rollout buffers are in
+    flight at any time, and neither program depends on the other within
+    an iteration (collect(t) needs params(t-1); update(t) needs
+    rollout(t-1)).  The consumed rollout is therefore exactly one policy
+    step stale, which V-trace (``rl/vtrace.py``; ``PPOConfig.rho_clip``
+    / ``c_clip``) corrects: the learner recomputes values and target
+    log-probs under its current params and regresses toward the
+    truncated-importance-weighted targets, while the fused on-policy
+    path keeps plain GAE.  The learner state deliberately lives on ONE
+    device: inside the fused mesh program the PPO epochs run replicated
+    on every shard (D redundant copies of the update work — the
+    simulated-mesh cost of the serialization), whereas the pipelined
+    learner pays it once and leaves the mesh to the envs.
   * ``train_host``: numpy loop over a host engine (thread / subprocess /
     for-loop) with the SAME jitted update — this is the configuration the
     paper's Figure 4 profiles (env-step vs inference vs train vs other
-    timing), reproduced in benchmarks/bench_ppo_profile.py.
+    timing), reproduced in benchmarks/bench_ppo_profile.py.  Each
+    profile bucket is closed only after ``block_until_ready`` on that
+    stage's outputs, so async XLA dispatch cannot leak one bucket's
+    work into the next.
+  * ``train_host_pipelined``: the same pipeline over a host engine —
+    an actor thread steps the pool (inference behind the latest
+    published params) and streams every served batch into a
+    ``core/buffers.py::StateBufferQueue`` ring (the paper's Appendix-D
+    block hand-off, now a hot path) while the learner thread takes
+    blocks, stacks a rollout, and runs the identical V-trace update;
+    the queue's bounded-occupancy backpressure caps how far the actor
+    can run ahead, bounding the policy lag the importance weights must
+    absorb.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Callable
 
@@ -38,6 +73,7 @@ from repro.core.device_pool import DeviceEnvPool
 from repro.core.protocol import EnvPool, is_functional
 from repro.rl.gae import gae
 from repro.rl.nets import ActorCritic
+from repro.rl.vtrace import vtrace
 from repro.optim import adamw, linear_decay
 from repro.utils.pytree import pytree_dataclass
 
@@ -57,6 +93,11 @@ class PPOConfig:
     max_grad_norm: float = 0.5
     anneal_lr: bool = True
     vf_clip: bool = True
+    # V-trace truncation thresholds (rho-bar / c-bar, Espeholt et al.
+    # 2018) for the pipelined drivers' one-step-stale rollouts; the
+    # fused on-policy path ignores them and keeps plain GAE.
+    rho_clip: float = 1.0
+    c_clip: float = 1.0
 
 
 @pytree_dataclass
@@ -128,6 +169,76 @@ def make_ppo_update(net: ActorCritic, cfg: PPOConfig, total_updates: int):
     return opt, update
 
 
+def make_vtrace_ppo_update(net: ActorCritic, cfg: PPOConfig,
+                           total_updates: int):
+    """The pipelined learner's update program: V-trace-corrected PPO.
+
+    ``update(state, rollout, key)`` consumes the raw hand-off rollout
+    (``build_pipelined_collect_fn`` layout: obs / actions / behavior
+    ``logp`` / rewards / dones / ``last_obs``), recomputes values and
+    target log-probs under the CURRENT params, forms V-trace value
+    targets and rho-clipped advantages (``rl/vtrace.py``) to absorb the
+    one-step policy lag, then runs the standard PPO epochs (the clipped
+    surrogate's ratio is taken against the recorded behavior log-prob).
+    Shared by ``train_pipelined`` and ``train_host_pipelined``.
+    """
+    opt, ppo_update = make_ppo_update(net, cfg, total_updates)
+
+    def update(state: PPOState, traj: dict[str, jnp.ndarray], key: jax.Array):
+        T, M = traj["rewards"].shape
+        obs_flat = traj["obs"].reshape((T * M,) + traj["obs"].shape[2:])
+        act_flat = traj["actions"].reshape(
+            (T * M,) + traj["actions"].shape[2:]
+        )
+        target_logp, _, v = net.logp_entropy(state.params, obs_flat, act_flat)
+        target_logp = target_logp.reshape(T, M)
+        values = v.reshape(T, M)
+        _, last_v = net.forward(state.params, traj["last_obs"])
+        vs, pg_adv = vtrace(
+            traj["logp"], target_logp, traj["rewards"], values,
+            traj["dones"], last_v, gamma=cfg.gamma, lam=cfg.lam,
+            rho_clip=cfg.rho_clip, c_clip=cfg.c_clip,
+        )
+        rollout = {
+            "obs": traj["obs"], "actions": traj["actions"],
+            "logp": traj["logp"], "values": values,
+            "adv": pg_adv, "ret": vs,
+        }
+        state, metrics = ppo_update(state, rollout, key)
+        # observability of the lag the correction absorbs: the mean raw
+        # importance ratio pi/mu over the consumed rollout (1.0 = no lag)
+        metrics = dict(metrics, rho_behavior=jnp.mean(
+            jnp.exp(target_logp - traj["logp"])
+        ))
+        return state, metrics
+
+    return opt, update
+
+
+def _episode_metrics(traj_dones, traj_ep_ret):
+    """In-graph episode stats: (episodes, ep_sum) scalars — the division
+    happens host-side where a zero count can be handled without NaN."""
+    episodes = jnp.sum(traj_dones)
+    ep_sum = jnp.sum(jnp.where(traj_dones, traj_ep_ret, 0.0))
+    return episodes, ep_sum
+
+
+def _record(history: list[dict], rec: dict, episodes: int, ep_sum: float,
+            log_fn) -> None:
+    """Append one iteration record, carrying ``mean_return`` forward when
+    the iteration completed zero episodes (previously ``ep_sum / 0``
+    produced NaN, which breaks strict-JSON serialization of the
+    history)."""
+    if episodes > 0:
+        mean_return = ep_sum / episodes
+    else:
+        mean_return = history[-1]["mean_return"] if history else 0.0
+    rec = dict(rec, episodes=episodes, mean_return=float(mean_return))
+    history.append(rec)
+    if log_fn:
+        log_fn(rec)
+
+
 # --------------------------------------------------------------------- #
 # fully on-device driver
 # --------------------------------------------------------------------- #
@@ -192,15 +303,12 @@ def train_device(
             "adv": adv, "ret": ret,
         }
         state, metrics = update(state, rollout, ku)
-        # episode stats reduced in-graph: only scalars cross to the host
-        dones = traj["dones"]
-        episodes = jnp.sum(dones)
-        ep_sum = jnp.sum(jnp.where(dones, traj["ep_ret"], 0.0))
-        metrics = dict(
-            metrics,
-            episodes=episodes,
-            mean_return=ep_sum / episodes.astype(jnp.float32),  # nan if 0
-        )
+        # episode stats reduced in-graph: only scalars cross to the host.
+        # The count and sum cross separately — the mean is formed host-
+        # side (``_record``) so a zero-episode iteration carries the
+        # previous value forward instead of emitting ``0/0 = NaN``.
+        episodes, ep_sum = _episode_metrics(traj["dones"], traj["ep_ret"])
+        metrics = dict(metrics, episodes=episodes, ep_sum=ep_sum)
         return state, ps, ts, metrics
 
     train_step = jax.jit(train_step, donate_argnums=(0, 1, 2))
@@ -214,16 +322,142 @@ def train_device(
     for it in range(n_iters):
         key, kc, ku = jax.random.split(key, 3)
         state, ps, ts, metrics = train_step(state, ps, ts, kc, ku)
+        episodes = int(metrics.pop("episodes"))
+        ep_sum = float(metrics.pop("ep_sum"))
         rec = {
             "iter": it,
             "env_steps": (it + 1) * steps_per_iter,
             "time_s": time.time() - t0,
-            "episodes": int(metrics.pop("episodes")),
             **{k: float(v) for k, v in metrics.items()},
         }
-        history.append(rec)
-        if log_fn:
-            log_fn(rec)
+        _record(history, rec, episodes, ep_sum, log_fn)
+    return state, net, history
+
+
+# --------------------------------------------------------------------- #
+# pipelined device driver (double-buffered collect/train, V-trace lag
+# correction — see the module docstring)
+# --------------------------------------------------------------------- #
+def train_pipelined(
+    pool: "DeviceEnvPool | Any",   # any mesh engine (device/device-sharded)
+    cfg: PPOConfig,
+    seed: int = 0,
+    log_fn: Callable[[dict], None] | None = None,
+    hidden: tuple[int, ...] = (256, 128, 64),
+):
+    """Pipelined collect/train over a functional (mesh) engine.
+
+    Two jitted programs per iteration instead of one fused
+    ``train_step``:
+
+      * ``collect`` (``build_pipelined_collect_fn``): the donated
+        rollout scan, sharded over the env mesh, sampling behind the
+        params published by the PREVIOUS iteration's update;
+      * ``update`` (``make_vtrace_ppo_update``): the single-device
+        learner consuming the PREVIOUS rollout — one policy step stale,
+        V-trace corrected.
+
+    Neither program depends on the other inside an iteration, so with
+    async dispatch they overlap: the env mesh collects rollout t+1
+    while the learner trains on rollout t (double buffering — two
+    rollout pytrees in flight).  The learner state is committed to a
+    single device: it pays the PPO epochs once, instead of the fused
+    program's D replicated copies across the mesh, and its params are
+    re-broadcast to the mesh each iteration (the Seed-RL learner→actor
+    push).  Returns ``(state, net, history)`` with the same history
+    schema as ``train_device`` plus ``rho_behavior`` (mean importance
+    ratio pi/mu — the observed policy lag the correction absorbs).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec, SingleDeviceSharding
+
+    from repro.core.xla_loop import build_pipelined_collect_fn
+
+    if not is_functional(pool):
+        raise ValueError("train_pipelined needs a functional (device-"
+                         "family) engine; host engines use "
+                         "train_host_pipelined")
+
+    net = ActorCritic(pool.spec, hidden=hidden)
+    key = jax.random.PRNGKey(seed)
+    key, k_init, k_pool = jax.random.split(key, 3)
+    params = net.init(k_init)
+
+    # learner placement: ONE device (the first of the pool's mesh).  The
+    # fused path replicates the update across all D shards; the
+    # pipelined learner pays it once and pushes params back out.  (A
+    # mesh-sharded learner for >1M-param policies is the multi-host
+    # disaggregation direction, ROADMAP #1.)
+    mesh = getattr(pool, "mesh", None)
+    learner_dev = (mesh.devices.flat[0] if mesh is not None
+                   else jax.devices()[0])
+    learner_sharding = SingleDeviceSharding(learner_dev)
+    params = jax.tree.map(
+        lambda x: jax.device_put(x, learner_sharding), params
+    )
+
+    M = pool.batch_size
+    steps_per_iter = cfg.num_steps * M
+    total_updates = max(
+        1, cfg.total_steps // steps_per_iter
+    ) * cfg.epochs * cfg.minibatches
+    opt, vupdate = make_vtrace_ppo_update(net, cfg, total_updates)
+    state = PPOState(params=params, opt=opt.init(params), step=jnp.int32(0))
+
+    def policy(p, obs, k):
+        a, logp, _, _ = net.sample(p, obs, k)
+        return a, logp
+
+    collect = build_pipelined_collect_fn(pool, policy, cfg.num_steps)
+
+    def update_step(state, traj, ku):
+        state, metrics = vupdate(state, traj, ku)
+        episodes, ep_sum = _episode_metrics(traj["dones"], traj["ep_ret"])
+        return state, dict(metrics, episodes=episodes, ep_sum=ep_sum)
+
+    update = jax.jit(update_step, donate_argnums=(0,))
+
+    def to_mesh(p):
+        """Publish the learner's params to the env mesh (replicated) —
+        the per-iteration actor push.  A no-op placement-wise when the
+        pool has no mesh."""
+        if mesh is None:
+            return p
+        rep = NamedSharding(mesh, PartitionSpec())
+        return jax.tree.map(lambda x: jax.device_put(x, rep), p)
+
+    def to_learner(tree):
+        return jax.tree.map(
+            lambda x: jax.device_put(x, learner_sharding), tree
+        )
+
+    ps, ts = pool.reset(k_pool)
+    if hasattr(pool, "device_put"):
+        ps = pool.device_put(ps)   # pin the env state to the mesh layout
+
+    # prologue: rollout 0 behind the init params
+    key, kc = jax.random.split(key)
+    ps, ts, traj_prev = collect(ps, to_mesh(state.params), ts, kc)
+
+    n_iters = max(1, cfg.total_steps // steps_per_iter)
+    history: list[dict] = []
+    t0 = time.time()
+    for it in range(n_iters):
+        key, kc, ku = jax.random.split(key, 3)
+        # dispatch collect(t+1) behind the CURRENT params — the update
+        # dispatched below produces the next ones, so the rollout the
+        # learner consumes is always exactly one policy step stale
+        ps, ts, traj_next = collect(ps, to_mesh(state.params), ts, kc)
+        state, metrics = update(state, to_learner(traj_prev), ku)
+        traj_prev = traj_next
+        episodes = int(metrics.pop("episodes"))
+        ep_sum = float(metrics.pop("ep_sum"))
+        rec = {
+            "iter": it,
+            "env_steps": (it + 1) * steps_per_iter,
+            "time_s": time.time() - t0,
+            **{k: float(v) for k, v in metrics.items()},
+        }
+        _record(history, rec, episodes, ep_sum, log_fn)
     return state, net, history
 
 
@@ -240,6 +474,13 @@ def train_host(
 ):
     """Returns (state, net, history, profile) where profile has the paper's
     four timing buckets: env_step / inference / train / other.
+
+    Bucket discipline: JAX dispatch is async, so every bucket is closed
+    only after ``block_until_ready`` on that stage's outputs — without
+    the fence the ``time.time()`` around ``sample``/``update`` measures
+    dispatch, and the compute silently leaks into whichever bucket
+    blocks next (historically ``env_step``, inflating the paper's
+    Fig. 4 env share).
 
     ``spec`` defaults to ``env_pool.spec`` (every protocol engine
     carries it); the explicit argument remains for backward compat.
@@ -286,6 +527,9 @@ def train_host(
             key, ks = jax.random.split(key)
             obs = jnp.asarray(out["obs"])
             a, logp, v, _ = sample(state.params, obs, ks)
+            # fence the bucket: the dispatch returns futures; without
+            # blocking, inference compute would be billed to env_step
+            jax.block_until_ready((a, logp, v))
             a_np = np.asarray(a)
             t1 = time.time()
             prof["inference"] += t1 - t0
@@ -315,6 +559,7 @@ def train_host(
             "values": values,
             "adv": adv, "ret": ret,
         }
+        jax.block_until_ready((adv, ret))   # GAE time belongs to other
         prof["other"] += time.time() - t0
         t0 = time.time()
         key, ku = jax.random.split(key)
@@ -324,14 +569,179 @@ def train_host(
 
         done_arr = np.stack(traj["dones"])
         rets = np.stack(traj["ep_ret"])[done_arr]
-        history.append({
+        rec = {
             "iter": it, "env_steps": (it + 1) * steps_per_iter,
             "time_s": time.time() - t_start,
-            "mean_return": float(rets.mean()) if rets.size else float("nan"),
             **{k: float(v) for k, v in metrics.items()},
-        })
-        if log_fn:
-            log_fn(history[-1])
+        }
+        _record(history, rec, int(rets.size), float(rets.sum()), log_fn)
+    return state, net, history, prof
+
+
+# --------------------------------------------------------------------- #
+# pipelined host driver: actor thread -> StateBufferQueue -> learner
+# --------------------------------------------------------------------- #
+def train_host_pipelined(
+    env_pool,                     # ThreadEnvPool / ForLoopEnv / SubprocessEnv
+    spec=None,
+    cfg: PPOConfig | None = None,
+    seed: int = 0,
+    log_fn: Callable[[dict], None] | None = None,
+    hidden: tuple[int, ...] = (256, 128, 64),
+):
+    """The pipelined driver over a host engine — Appendix D's queues on
+    an actual hot path.
+
+    An actor thread loops ``sample -> step`` (inference behind the
+    latest params the learner has published) and streams every served
+    batch into a ``StateBufferQueue`` via ``put_batch`` — one slice
+    write into the pre-allocated ring, no copies on take.  The learner
+    thread ``take``s ``num_steps`` blocks, stacks the rollout, and runs
+    the same V-trace-corrected PPO update as ``train_pipelined``
+    (behavior log-probs recorded by the actor; values/target log-probs
+    recomputed under the current params).  The ring's bounded occupancy
+    is the backpressure: the actor blocks once ``num_blocks`` batches
+    are outstanding, so its policy lag stays bounded by the queue depth
+    rather than growing with learner stalls.
+
+    Returns ``(state, net, history, profile)``; the profile buckets are
+    ``actor_wait`` (learner time blocked on the queue — env stepping
+    that did NOT overlap), ``train`` and ``other``.
+    """
+    if spec is None:
+        spec = env_pool.spec
+    if cfg is None:
+        cfg = PPOConfig()
+
+    from repro.core.buffers import StateBufferQueue
+
+    net = ActorCritic(spec, hidden=hidden)
+    key = jax.random.PRNGKey(seed)
+    key, k_init = jax.random.split(key)
+    params = net.init(k_init)
+
+    M = getattr(env_pool, "batch_size", env_pool.num_envs)
+    steps_per_iter = cfg.num_steps * M
+    total_updates = max(1, cfg.total_steps // steps_per_iter) \
+        * cfg.epochs * cfg.minibatches
+    opt, vupdate = make_vtrace_ppo_update(net, cfg, total_updates)
+    state = PPOState(params=params, opt=opt.init(params), step=jnp.int32(0))
+    # NO donate_argnums here: the actor thread samples with the published
+    # params buffers concurrently, and donating state would invalidate the
+    # exact buffers it holds mid-inference (unlike train_pipelined, where
+    # the collect program gets its own replicated device_put copy).
+    update = jax.jit(vupdate)
+    sample = jax.jit(net.sample)
+
+    obs_dt = np.dtype(spec.obs_spec.dtype)
+    act_dt = np.dtype(spec.act_spec.dtype)
+    fields = {
+        "obs": (tuple(spec.obs_spec.shape), obs_dt),
+        "next_obs": (tuple(spec.obs_spec.shape), obs_dt),
+        "actions": (tuple(spec.act_spec.shape), act_dt),
+        "logp": ((), np.float32),
+        "rewards": ((), np.float32),
+        "dones": ((), np.bool_),
+        "ep_ret": ((), np.float32),
+    }
+    queue = StateBufferQueue(fields, M, env_pool.num_envs)
+
+    # the published behavior params: written by the learner, read by the
+    # actor (a dict-slot swap is atomic under the GIL)
+    published = {"params": state.params}
+    stop = threading.Event()
+    failure: list[BaseException] = []
+
+    def actor():
+        try:
+            akey = jax.random.PRNGKey(seed + 1)
+            if hasattr(env_pool, "async_reset"):
+                env_pool.async_reset()
+                out = env_pool.recv()
+            else:
+                out = env_pool.reset()
+            while not stop.is_set():
+                akey, ks = jax.random.split(akey)
+                obs = jnp.asarray(out["obs"])
+                a, logp, _, _ = sample(published["params"], obs, ks)
+                a_np = np.asarray(a)
+                new_out = env_pool.step(a_np, out["env_id"])
+                batch = {
+                    "obs": np.asarray(out["obs"]),
+                    "next_obs": np.asarray(new_out["obs"]),
+                    "actions": a_np,
+                    "logp": np.asarray(logp),
+                    "rewards": np.asarray(new_out["reward"], np.float32),
+                    "dones": np.asarray(new_out["done"], bool),
+                    "ep_ret": np.asarray(
+                        new_out["episode_return"], np.float32
+                    ),
+                }
+                while not stop.is_set():
+                    try:
+                        # bounded-occupancy backpressure: wait for the
+                        # learner, re-checking stop so shutdown can't
+                        # deadlock against a full ring
+                        queue.put_batch(batch, timeout=0.1)
+                        break
+                    except TimeoutError:
+                        continue
+                out = new_out
+        except BaseException as e:  # surface actor crashes to the learner
+            failure.append(e)
+            stop.set()
+
+    thread = threading.Thread(target=actor, daemon=True)
+    thread.start()
+
+    prof = {"actor_wait": 0.0, "train": 0.0, "other": 0.0}
+    history: list[dict] = []
+    n_iters = max(1, cfg.total_steps // steps_per_iter)
+    t_start = time.time()
+    try:
+        for it in range(n_iters):
+            t0 = time.time()
+            blocks = []
+            for _ in range(cfg.num_steps):
+                while True:
+                    if failure:
+                        raise RuntimeError(
+                            "pipelined actor thread died"
+                        ) from failure[0]
+                    try:
+                        blocks.append(queue.take(timeout=5.0))
+                        break
+                    except TimeoutError:
+                        continue
+            prof["actor_wait"] += time.time() - t0
+
+            t0 = time.time()
+            traj = {
+                k: jnp.asarray(np.stack([b[k] for b in blocks]))
+                for k in ("obs", "actions", "logp", "rewards", "dones",
+                          "ep_ret")
+            }
+            traj["last_obs"] = jnp.asarray(blocks[-1]["next_obs"])
+            prof["other"] += time.time() - t0
+
+            t0 = time.time()
+            key, ku = jax.random.split(key)
+            state, metrics = update(state, traj, ku)
+            jax.block_until_ready(metrics["loss"])
+            published["params"] = state.params   # the learner->actor push
+            prof["train"] += time.time() - t0
+
+            dones = np.stack([b["dones"] for b in blocks])
+            rets = np.stack([b["ep_ret"] for b in blocks])[dones]
+            rec = {
+                "iter": it, "env_steps": (it + 1) * steps_per_iter,
+                "time_s": time.time() - t_start,
+                **{k: float(v) for k, v in metrics.items()},
+            }
+            _record(history, rec, int(rets.size), float(rets.sum()), log_fn)
+    finally:
+        stop.set()
+        thread.join(timeout=10.0)
     return state, net, history, prof
 
 

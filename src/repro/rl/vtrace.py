@@ -1,0 +1,91 @@
+"""V-trace off-policy advantage estimation (Espeholt et al. 2018, IMPALA).
+
+The pipelined driver (``rl/ppo.py::train_pipelined``) collects rollout
+t+1 behind the *previous* policy while the learner consumes rollout t —
+so every consumed transition is exactly one policy step stale.  V-trace
+makes that lag principled instead of ignored: per-step truncated
+importance weights re-weight the TD errors of the behavior policy
+:math:`\\mu` toward the target policy :math:`\\pi`,
+
+.. math::
+
+    \\rho_t = \\min(\\bar\\rho, \\pi(a_t|x_t)/\\mu(a_t|x_t)), \\qquad
+    c_t = \\lambda \\min(\\bar c, \\pi(a_t|x_t)/\\mu(a_t|x_t))
+
+    v_t = V(x_t) + \\delta_t + \\gamma c_t (v_{t+1} - V(x_{t+1})), \\qquad
+    \\delta_t = \\rho_t (r_t + \\gamma V(x_{t+1}) - V(x_t))
+
+with the policy-gradient advantage
+:math:`\\rho_t (r_t + \\gamma v_{t+1} - V(x_t))`.  The clip thresholds
+:math:`\\bar\\rho \\ge \\bar c` bound the variance of the correction
+(IMPALA defaults: both 1.0 — ``PPOConfig.rho_clip`` / ``c_clip``).
+
+Contract notes (mirrors ``rl/gae.py``):
+
+  * when the behavior and target policies coincide (all ratios 1) the
+    corrected values reduce EXACTLY to GAE: ``vs - values`` equals
+    ``gae(...)[0]`` for the same ``lam`` — V-trace is the off-policy
+    generalization, not a different estimator (pinned in
+    tests/test_rl.py);
+  * ``dones`` cuts the bootstrap exactly like GAE's ``not_done`` mask
+    (auto-reset boundaries carry no value across episodes);
+  * pure ``lax.scan`` over the time axis — jit/vmap/shard-map safe in
+    the engine's safety-contract style, usable inside a donated update
+    program.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import lax
+
+
+class VTraceReturns(NamedTuple):
+    vs: jnp.ndarray             # (T, N) corrected value targets
+    pg_advantages: jnp.ndarray  # (T, N) rho-clipped policy-gradient advs
+
+
+def vtrace(
+    behavior_logp: jnp.ndarray,   # (T, N) log mu(a_t | x_t) at collect time
+    target_logp: jnp.ndarray,     # (T, N) log pi(a_t | x_t) under the learner
+    rewards: jnp.ndarray,         # (T, N)
+    values: jnp.ndarray,          # (T, N) V(x_t) under the learner
+    dones: jnp.ndarray,           # (T, N) done AFTER this transition
+    bootstrap_value: jnp.ndarray, # (N,)  V(x_{T}) under the learner
+    gamma: float = 0.99,
+    lam: float = 1.0,
+    rho_clip: float = 1.0,
+    c_clip: float = 1.0,
+) -> VTraceReturns:
+    """Returns ``(vs, pg_advantages)``, both ``(T, N)``.
+
+    ``vs`` are the V-trace value targets (regress V toward these);
+    ``pg_advantages`` feed the policy loss.  ``rho_clip``/``c_clip``
+    truncate the importance ratios (:math:`\\bar\\rho`/:math:`\\bar c`);
+    ``lam`` is the GAE-style trace decay multiplying :math:`c_t`.
+    """
+    not_done = 1.0 - dones.astype(jnp.float32)
+    ratio = jnp.exp(target_logp - behavior_logp)
+    rho = jnp.minimum(ratio, rho_clip)
+    c = lam * jnp.minimum(ratio, c_clip)
+
+    values_next = jnp.concatenate([values[1:], bootstrap_value[None]], axis=0)
+    delta = rho * (rewards + gamma * values_next * not_done - values)
+
+    def step(acc, xs):
+        d, c_t, nd = xs
+        acc = d + gamma * nd * c_t * acc
+        return acc, acc
+
+    _, dv = lax.scan(
+        step,
+        jnp.zeros_like(bootstrap_value),
+        (delta, c, not_done),
+        reverse=True,
+    )
+    vs = values + dv
+    vs_next = jnp.concatenate([vs[1:], bootstrap_value[None]], axis=0)
+    pg_adv = rho * (rewards + gamma * vs_next * not_done - values)
+    return VTraceReturns(vs=vs, pg_advantages=pg_adv)

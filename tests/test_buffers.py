@@ -81,6 +81,100 @@ def test_state_queue_ownership_transfer():
     assert out1["x"].tolist() == [1.0, 2.0]
 
 
+def test_action_queue_empty_put_batch():
+    """An empty batch is a legal no-op — ``Semaphore.release(0)`` raises
+    ValueError in CPython, so the zero-item case must be guarded."""
+    q = ActionBufferQueue(num_envs=2)
+    q.put_batch([])                      # must not raise
+    q.put_batch([(0, "a")])
+    q.put_batch([])
+    assert q.get() == (0, "a")
+    with pytest.raises(TimeoutError):
+        q.get(timeout=0.05)              # nothing phantom-enqueued
+
+
+def test_action_queue_overflow_backpressures():
+    """More than 2N outstanding items must block (bounded occupancy),
+    never silently overwrite unconsumed slots."""
+    q = ActionBufferQueue(num_envs=2)    # capacity 4
+    q.put_batch([(i, i) for i in range(4)])
+    with pytest.raises(TimeoutError):
+        q.put_batch([(9, 9)], timeout=0.05)
+    # a failed put leaves the queue untouched
+    assert q.get() == (0, 0)
+    q.put_batch([(4, 4)], timeout=0.5)   # one slot free now
+    assert [q.get() for _ in range(4)] == [(i, i) for i in range(1, 5)]
+    with pytest.raises(ValueError):
+        q.put_batch([(i, i) for i in range(5)])  # can never fit
+
+
+def test_action_queue_wraparound_past_capacity():
+    """FIFO order and zero loss across many laps of the 2N ring, with a
+    concurrent consumer providing the backpressure drain."""
+    q = ActionBufferQueue(num_envs=2)    # capacity 4
+    total = 6 * 4                        # 6 laps
+    got = []
+
+    def consumer():
+        for _ in range(total):
+            got.append(q.get(timeout=5))
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    for lo in range(0, total, 3):
+        q.put_batch([(i, i * 10) for i in range(lo, min(lo + 3, total))],
+                    timeout=5)
+    t.join(timeout=10)
+    assert not t.is_alive()
+    assert got == [(i, i * 10) for i in range(total)]
+
+
+def test_state_queue_put_batch_straddles_blocks():
+    """One put_batch spanning a block boundary must slice-write each
+    spanned block and preserve allocation order."""
+    fields = {"x": ((), np.int32)}
+    q = StateBufferQueue(fields, 4, 8)          # 3 blocks of 4
+    q.put_batch({"x": np.arange(6)})            # fills blk0, half of blk1
+    assert q.take(timeout=1)["x"].tolist() == [0, 1, 2, 3]
+    q.put_batch({"x": np.arange(6, 8)})         # completes blk1
+    assert q.take(timeout=1)["x"].tolist() == [4, 5, 6, 7]
+
+
+def test_state_queue_put_batch_backpressure():
+    """Producers block once num_blocks * batch slots are outstanding —
+    a fast actor can never wrap onto an untaken block."""
+    fields = {"x": ((), np.int32)}
+    q = StateBufferQueue(fields, 4, 4)          # 2 blocks = 8 slots
+    q.put_batch({"x": np.arange(8)})
+    with pytest.raises(TimeoutError):
+        q.put_batch({"x": np.arange(8, 12)}, timeout=0.05)
+    assert q.take(timeout=1)["x"].tolist() == [0, 1, 2, 3]
+    q.put_batch({"x": np.arange(8, 12)}, timeout=1)   # 4 slots free now
+    assert q.take(timeout=1)["x"].tolist() == [4, 5, 6, 7]
+    assert q.take(timeout=1)["x"].tolist() == [8, 9, 10, 11]
+
+
+def test_state_queue_concurrent_writer_taker_ordering():
+    """A producer thread streaming put_batch against a consuming take
+    loop: every row arrives exactly once, in allocation order, across
+    many laps of the 2-block ring (the train_host_pipelined topology)."""
+    fields = {"x": ((), np.int64)}
+    q = StateBufferQueue(fields, 4, 4)          # 2 blocks = 8 slots
+    total_blocks = 15
+    rows = np.arange(total_blocks * 4)
+
+    def writer():
+        for lo in range(0, rows.size, 3):       # deliberately != batch
+            q.put_batch({"x": rows[lo:lo + 3]}, timeout=5)
+
+    t = threading.Thread(target=writer)
+    t.start()
+    got = [q.take(timeout=5)["x"] for _ in range(total_blocks)]
+    t.join(timeout=10)
+    assert not t.is_alive()
+    assert np.concatenate(got).tolist() == rows.tolist()
+
+
 def test_state_queue_out_of_order_completion():
     fields = {"x": ((), np.int32)}
     q = StateBufferQueue(fields, 3, 6)
