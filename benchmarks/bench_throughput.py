@@ -54,6 +54,19 @@ preprocessing belongs inside the engine.  Both sides run the identical
 step loop and materialize the final observations on the host; only the
 transform placement differs.  Writes ``BENCH_transforms.json``;
 ``--min-transform-ratio`` gates CI on in-engine/wrapper FPS.
+
+``--image`` is the same placement A/B on the IMAGE pipeline
+(``PongClassic-v5``: native 210x160 RGB render -> Grayscale -> Resize
+(84,84) -> FrameStack(4) -> RewardClip, the ALE preprocessing stack).
+In-engine, grayscale+resize run as the ``kernels/image`` family fused
+into the jitted recv next to the batched render; the wrapper side
+ships full RGB screens to the host and runs the bitwise-identical
+numpy mirrors per step.  Writes ``BENCH_image.json``;
+``--min-image-ratio`` gates CI on in-engine/wrapper FPS.
+
+Every artifact carries a shared ``meta`` header (git commit, jax
+version + platform, device count, resolved kernel backend, host core
+count) so BENCH_*.json files are comparable across machines/commits.
 """
 
 from __future__ import annotations
@@ -67,6 +80,34 @@ import time
 import numpy as np
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def bench_meta() -> dict:
+    """Shared metadata header stamped into every BENCH_*.json artifact:
+    enough provenance to compare numbers across machines and commits.
+    jax is imported lazily — this runs after the benches, so the mesh
+    env-var dance in main() has already happened."""
+    import subprocess
+
+    import jax
+
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=ROOT, capture_output=True,
+            text=True, timeout=10,
+        ).stdout.strip() or None
+    except Exception:
+        commit = None
+    from repro.kernels.backend import resolve_backend
+
+    return {
+        "git_commit": commit,
+        "jax_version": jax.__version__,
+        "jax_platform": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "kernel_backend": resolve_backend("auto"),
+        "host_cpu_count": os.cpu_count(),
+    }
 
 
 def fps_unit(task: str) -> str:
@@ -452,9 +493,10 @@ def bench_transform_placement(task: str, num_envs: int, steps: int,
 
 
 def run_transforms(task: str = "PongStack-v5", num_envs: int = 32,
-                   steps: int = 30, iters: int = 3
-                   ) -> tuple[list[str], dict]:
-    """In-engine vs python-wrapper preprocessing A/B (see --transforms)."""
+                   steps: int = 30, iters: int = 3,
+                   prefix: str = "transforms") -> tuple[list[str], dict]:
+    """In-engine vs python-wrapper preprocessing A/B (see --transforms
+    and --image; the harness is task-generic, only the preset differs)."""
     fps_wrap = bench_transform_placement(task, num_envs, steps, iters,
                                          wrapper=True)
     fps_eng = bench_transform_placement(task, num_envs, steps, iters,
@@ -462,11 +504,11 @@ def run_transforms(task: str = "PongStack-v5", num_envs: int = 32,
     ratio = fps_eng / max(fps_wrap, 1e-9)
     unit = fps_unit(task)
     rows = [
-        f"transforms_{task}_wrapper_N{num_envs},"
+        f"{prefix}_{task}_wrapper_N{num_envs},"
         f"{1e6/max(fps_wrap,1e-9):.3f},{fps_wrap:.0f} {unit}/s",
-        f"transforms_{task}_inengine_N{num_envs},"
+        f"{prefix}_{task}_inengine_N{num_envs},"
         f"{1e6/max(fps_eng,1e-9):.3f},{fps_eng:.0f} {unit}/s",
-        f"transforms_{task}_RATIO,{ratio:.3f},in-engine/wrapper FPS",
+        f"{prefix}_{task}_RATIO,{ratio:.3f},in-engine/wrapper FPS",
     ]
     summary = {
         "task": task,
@@ -515,6 +557,7 @@ def write_json(rows: list[str], extra: dict | None = None,
     path = path or os.path.join(ROOT, "BENCH_throughput.json")
     payload = {
         "benchmark": "throughput",
+        "meta": bench_meta(),
         "rows": [
             dict(zip(("name", "us_per_unit", "note"), r.split(",", 2)))
             for r in rows
@@ -560,6 +603,14 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--transforms", action="store_true",
                     help="in-engine transform pipeline vs python-wrapper "
                          "A/B on PongStack-v5; writes BENCH_transforms.json")
+    ap.add_argument("--image", action="store_true",
+                    help="in-engine vs python-wrapper IMAGE-pipeline "
+                         "A/B on PongClassic-v5 (RGB render + Pallas "
+                         "grayscale/resize family); writes "
+                         "BENCH_image.json")
+    ap.add_argument("--min-image-ratio", type=float, default=0.0,
+                    help="fail (exit 1) if in-engine/wrapper FPS on the "
+                         "image pipeline is below this")
     ap.add_argument("--min-transform-ratio", type=float, default=0.0,
                     help="fail (exit 1) if in-engine/wrapper FPS drops "
                          "below this (CI gate)")
@@ -623,6 +674,18 @@ def main(argv: list[str] | None = None) -> int:
         rows = run_mesh(args.mesh, args.task, args.envs_per_shard,
                         args.steps, args.iters)
         extra = {"mode": "mesh", "mesh": args.mesh}
+    elif args.image:
+        if args.smoke:
+            # N=64 for the same reason as --transforms; fewer steps —
+            # every wrapper step ships N full 210x160x3 screens to the
+            # host, so the gap shows up fast
+            args.num_envs, args.steps, args.iters = 64, 10, 2
+        task = args.task if args.task != "TokenCopy-v0" else "PongClassic-v5"
+        rows, summary = run_transforms(task, args.num_envs, args.steps,
+                                       args.iters, prefix="image")
+        extra = {"mode": "image", "image": summary}
+        if args.json is None:
+            args.json = os.path.join(ROOT, "BENCH_image.json")
     elif args.transforms:
         if args.smoke:
             # N=64 so the placement gap (numpy wrapper copies scale
@@ -682,6 +745,14 @@ def main(argv: list[str] | None = None) -> int:
             return 1
         print(f"[bench] {best}/fifo ratio {ratio:.3f} >= "
               f"{args.min_schedule_ratio} OK")
+    if extra.get("mode") == "image" and args.min_image_ratio > 0:
+        ratio = extra["image"]["ratio"]
+        if ratio < args.min_image_ratio:
+            print(f"[bench] FAIL: image in-engine/wrapper ratio "
+                  f"{ratio:.3f} < {args.min_image_ratio}")
+            return 1
+        print(f"[bench] image in-engine/wrapper ratio {ratio:.3f} >= "
+              f"{args.min_image_ratio} OK")
     if extra.get("mode") == "transforms" and args.min_transform_ratio > 0:
         ratio = extra["transforms"]["ratio"]
         if ratio < args.min_transform_ratio:

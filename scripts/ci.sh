@@ -63,5 +63,21 @@ if [ -z "${CI_SKIP_BENCH:-}" ]; then
     # Writes BENCH_transforms.json.
     python benchmarks/bench_throughput.py --transforms --smoke \
         --min-transform-ratio 1.0
+
+    echo "== image-kernel family conformance (Pallas gray/resize/crop/render) =="
+    # backend tri-identity (pallas-interpret == reference == jnp
+    # fallback, bitwise), the numpy mirrors, the PongClassic-v5 golden
+    # dynamics pin, and engine conformance (also tier-1; standalone for
+    # bench-only invocations)
+    python -m pytest -q tests/test_image_kernels.py
+
+    echo "== in-engine vs python-wrapper IMAGE pipeline A/B (PongClassic-v5) =="
+    # the on-device image pipeline's acceptance gate: RGB render +
+    # grayscale/resize fused into the jitted recv must beat shipping
+    # raw 210x160x3 screens to a host-side numpy wrapper by >= 1.5x at
+    # the smoke's N=64 (typical ~1.8x on this CI).  Writes
+    # BENCH_image.json.
+    python benchmarks/bench_throughput.py --image --smoke \
+        --min-image-ratio 1.5
 fi
 echo "CI OK"

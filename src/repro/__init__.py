@@ -17,6 +17,7 @@ _CORE_EXPORTS = (
     # in-engine transform pipeline (core/transforms.py)
     "Transform", "TransformPipeline", "FrameStack", "RewardClip",
     "ObsCast", "NormalizeObs", "EpisodicLife",
+    "Grayscale", "Resize", "Crop",
 )
 
 

@@ -35,10 +35,13 @@ from repro.core.registry import (
 from repro.core.sharded_pool import ShardedDeviceEnvPool, make_env_mesh
 from repro.core.specs import ArraySpec, EnvSpec, TimeStep
 from repro.core.transforms import (
+    Crop,
     EpisodicLife,
     FrameStack,
+    Grayscale,
     NormalizeObs,
     ObsCast,
+    Resize,
     RewardClip,
     Transform,
     TransformPipeline,
@@ -49,6 +52,7 @@ from repro.core.xla_loop import build_collect_fn, build_random_collect_fn, colle
 __all__ = [
     "ArraySpec",
     "BoundEnvPool",
+    "Crop",
     "DeviceEnvPool",
     "DmEnv",
     "EnvPool",
@@ -56,10 +60,12 @@ __all__ = [
     "EpisodicLife",
     "FrameStack",
     "FunctionalEnvPool",
+    "Grayscale",
     "MeshEnvPool",
     "NormalizeObs",
     "ObsCast",
     "PoolState",
+    "Resize",
     "RewardClip",
     "Transform",
     "TransformPipeline",

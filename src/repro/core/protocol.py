@@ -56,6 +56,17 @@ the served view of a trajectory — never the underlying env dynamics,
 scheduling, auto-reset points, or ``episode_return`` bookkeeping —
 so engine conformance (identical streams across engines for identical
 seeds/actions) holds for transformed streams exactly as for raw ones.
+The image transforms (``Grayscale`` / ``Resize(h, w)`` / ``Crop``,
+backed by the ``kernels/image`` Pallas family) follow the same rules
+with image-specific spec transformations: ``Grayscale`` requires a
+trailing channel axis — uint8 ``(..., H, W, 3)`` — and drops it;
+``Resize`` requires uint8 rank >= 2 and replaces the trailing two axes
+with ``(h, w)``; ``Crop`` validates its window against the trailing
+``(H, W)`` at pipeline-construction time (out-of-bounds windows raise
+``ValueError`` before any tracing).  All three are stateless and
+integer-fixed-point, so the device kernels and the host numpy mirrors
+are bitwise-identical — image streams keep full engine conformance,
+and the served dtype stays uint8 end to end.
 Stateful transform pipelines (e.g. ``NormalizeObs`` running moments)
 are checkpointable on the functional engines:
 ``save_transform_state``/``restore_transform_state`` round-trip

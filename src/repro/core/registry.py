@@ -272,7 +272,9 @@ def _ensure_defaults() -> None:
 
     from repro.core.transforms import (
         FrameStack,
+        Grayscale,
         NormalizeObs,
+        Resize,
         RewardClip,
     )
 
@@ -291,6 +293,14 @@ def _ensure_defaults() -> None:
     # the normalized-observation MuJoCo task
     register("PongStack-v5", AtariLike,
              transforms=(FrameStack(4), RewardClip()))
+    # THE classic EnvPool/ALE pipeline, fully in-engine: the env renders
+    # the native 210x160 RGB screen (one batched kernels/image render
+    # per recv) and the jitted recv fuses grayscale -> 84x84 area-resize
+    # -> stack -> clip, so pixels never leave the device raw
+    register("PongClassic-v5",
+             lambda **kw: AtariLike(**{"obs_mode": "rgb", **kw}),
+             transforms=(Grayscale(), Resize(84, 84), FrameStack(4),
+                         RewardClip()))
     register("AntNorm-v3", MujocoLike, transforms=(NormalizeObs(),))
     # long-tail-skew workloads (heterogeneous per-episode step cost —
     # the scheduling-policy benchmark; see bench_throughput --schedule)

@@ -57,7 +57,13 @@ engine scheduling, auto-reset points) — only the *served view* of them.
 
 Shipped transforms: ``FrameStack(k)``, ``RewardClip``, ``ObsCast``
 (cast + affine scale), ``EpisodicLife``, ``NormalizeObs`` (running
-mean/var, psum-merged across a sharded mesh).
+mean/var, psum-merged across a sharded mesh), and the image family
+``Grayscale`` / ``Resize(h, w)`` / ``Crop`` backed by the
+``kernels/image`` Pallas family (compiled on TPU, bit-identical jnp
+fallback elsewhere; integer fixed-point math, so the numpy mirrors are
+bitwise too — the full classic Atari path ``Grayscale -> Resize(84,84)
+-> FrameStack(4) -> RewardClip`` ships as the ``PongClassic-v5``
+preset).
 """
 
 from __future__ import annotations
@@ -290,6 +296,158 @@ class EpisodicLife(Transform):
 
 
 # --------------------------------------------------------------------- #
+# image transforms (kernels/image: Pallas on TPU, jnp fallback off-TPU;
+# integer fixed-point math -> device path == numpy mirror, bitwise)
+# --------------------------------------------------------------------- #
+class Grayscale(Transform):
+    """RGB -> luma (the ALE/OpenCV coefficients in 15-bit fixed point).
+    Spec rule: drops the trailing channel dim, ``(..., H, W, 3) uint8 ->
+    (..., H, W) uint8``.  Stateless and integer-exact, so every engine
+    (and the host numpy mirror) emits the identical stream."""
+
+    name = "grayscale"
+
+    def __init__(self, backend: str = "auto"):
+        from repro.kernels.backend import resolve_backend
+
+        resolve_backend(backend)   # validate eagerly
+        self.backend = backend
+
+    def transform_spec(self, spec: EnvSpec) -> EnvSpec:
+        o = spec.obs_spec
+        if len(o.shape) < 3 or o.shape[-1] != 3:
+            raise ValueError(
+                f"Grayscale wants (..., H, W, 3) observations; got {o.shape}"
+            )
+        if np.dtype(o.dtype) != np.uint8:
+            raise ValueError(
+                f"Grayscale wants uint8 observations; got {o.dtype}"
+            )
+        return dataclasses.replace(
+            spec, obs_spec=dataclasses.replace(o, shape=o.shape[:-1])
+        )
+
+    def apply(self, state, ts, spec, axis_name=None):
+        from repro.kernels.image.ops import grayscale
+
+        return state, ts.replace(obs=grayscale(ts.obs, backend=self.backend))
+
+    def np_apply(self, state, out, spec):
+        from repro.kernels.image.ref import grayscale_np
+
+        out = dict(out)
+        out["obs"] = grayscale_np(np.asarray(out["obs"]))
+        return state, out
+
+
+class Resize(Transform):
+    """Fixed-point resampling of the trailing (H, W) dims to ``(h, w)``
+    (``area`` — the ALE/EnvPool downsampler — or ``bilinear``).  Spec
+    rule: replaces the last two dims, ``(..., H, W) uint8 ->
+    (..., h, w) uint8``; apply ``Grayscale`` first for RGB streams.
+    Stateless, integer-exact across all backends and the numpy mirror."""
+
+    name = "resize"
+
+    def __init__(self, h: int, w: int, method: str = "area",
+                 backend: str = "auto"):
+        from repro.kernels.backend import resolve_backend
+        from repro.kernels.image.ref import RESIZE_METHODS
+
+        if h < 1 or w < 1:
+            raise ValueError(f"Resize needs h, w >= 1; got ({h}, {w})")
+        if method not in RESIZE_METHODS:
+            raise ValueError(
+                f"unknown resize method {method!r}; known: {RESIZE_METHODS}"
+            )
+        resolve_backend(backend)
+        self.h, self.w = int(h), int(w)
+        self.method = method
+        self.backend = backend
+
+    def transform_spec(self, spec: EnvSpec) -> EnvSpec:
+        o = spec.obs_spec
+        if len(o.shape) < 2:
+            raise ValueError(
+                f"Resize wants (..., H, W) observations; got {o.shape}"
+            )
+        if np.dtype(o.dtype) != np.uint8:
+            raise ValueError(f"Resize wants uint8 observations; got {o.dtype}")
+        return dataclasses.replace(
+            spec,
+            obs_spec=dataclasses.replace(
+                o, shape=o.shape[:-2] + (self.h, self.w)
+            ),
+        )
+
+    def apply(self, state, ts, spec, axis_name=None):
+        from repro.kernels.image.ops import resize
+
+        return state, ts.replace(
+            obs=resize(ts.obs, self.h, self.w, self.method,
+                       backend=self.backend)
+        )
+
+    def np_apply(self, state, out, spec):
+        from repro.kernels.image.ref import resize_np
+
+        out = dict(out)
+        out["obs"] = resize_np(np.asarray(out["obs"]), self.h, self.w,
+                               self.method)
+        return state, out
+
+
+class Crop(Transform):
+    """Static-window crop of the trailing (H, W) dims.  Spec rule:
+    ``(..., H, W) -> (..., height, width)`` with the window validated
+    against the input spec at construction time."""
+
+    name = "crop"
+
+    def __init__(self, top: int, left: int, height: int, width: int,
+                 backend: str = "auto"):
+        from repro.kernels.backend import resolve_backend
+
+        resolve_backend(backend)
+        self.top, self.left = int(top), int(left)
+        self.height, self.width = int(height), int(width)
+        self.backend = backend
+
+    def transform_spec(self, spec: EnvSpec) -> EnvSpec:
+        from repro.kernels.image.ref import check_crop
+
+        o = spec.obs_spec
+        if len(o.shape) < 2:
+            raise ValueError(
+                f"Crop wants (..., H, W) observations; got {o.shape}"
+            )
+        check_crop(o.shape[-2], o.shape[-1], self.top, self.left,
+                   self.height, self.width)
+        return dataclasses.replace(
+            spec,
+            obs_spec=dataclasses.replace(
+                o, shape=o.shape[:-2] + (self.height, self.width)
+            ),
+        )
+
+    def apply(self, state, ts, spec, axis_name=None):
+        from repro.kernels.image.ops import crop
+
+        return state, ts.replace(
+            obs=crop(ts.obs, self.top, self.left, self.height, self.width,
+                     backend=self.backend)
+        )
+
+    def np_apply(self, state, out, spec):
+        from repro.kernels.image.ref import crop_reference
+
+        out = dict(out)
+        out["obs"] = crop_reference(np.asarray(out["obs"]), self.top,
+                                    self.left, self.height, self.width)
+        return state, out
+
+
+# --------------------------------------------------------------------- #
 # NormalizeObs
 # --------------------------------------------------------------------- #
 class NormalizeObs(Transform):
@@ -515,10 +673,13 @@ def resolve_transforms(transforms: Sequence[Transform] | None,
 
 
 __all__ = [
+    "Crop",
     "EpisodicLife",
     "FrameStack",
+    "Grayscale",
     "NormalizeObs",
     "ObsCast",
+    "Resize",
     "RewardClip",
     "Transform",
     "TransformPipeline",

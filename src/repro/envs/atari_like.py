@@ -19,6 +19,16 @@ Matched properties with the real benchmark target:
     long-tail variability the async engine exploits,
   * 6 discrete actions (NOOP/FIRE/UP/DOWN/UPFIRE/DOWNFIRE, like Pong-v5),
   * first to 21 points ends the episode.
+
+``obs_mode="rgb"`` renders the native 210 x 160 x 3 ALE screen instead
+of the toy 84 x 84 frame — the full classic preprocessing then runs
+in-engine (``PongClassic-v5``: Grayscale -> Resize(84, 84) ->
+FrameStack(4) -> RewardClip).  ``AtariLikeBatch`` (the
+``MujocoLikeBatch`` idiom) renders the whole served block in ONE
+batched ``kernels/image`` Pallas call per recv (compiled on TPU; the
+bit-identical jnp form off-TPU).  Rendering stays observe-only in both
+modes, so dynamics, rng and the reward/done/cost streams are bitwise
+identical across obs modes (pinned by tests/golden_atari_stream.npz).
 """
 
 from __future__ import annotations
@@ -28,9 +38,14 @@ import jax.numpy as jnp
 
 from repro.core.specs import ArraySpec, EnvSpec
 from repro.envs.base import Environment
+from repro.envs.batch import VmapBatchEnv
+from repro.kernels.backend import resolve_backend
+from repro.kernels.image.ops import pong_render
+from repro.kernels.image.ref import RGB_H, RGB_W, pong_render_reference
 from repro.utils.pytree import pytree_dataclass
 
 H = W = 84
+OBS_MODES = ("gray84", "rgb")
 PADDLE_LEN = 12
 FRAME_STACK = 4   # default FrameStack(k) of the registered Pong-v5 pipeline
 WIN_SCORE = 21
@@ -56,10 +71,20 @@ class AtariLikeState:
 class AtariLike(Environment):
     """Pong-like game; env name mirrors EnvPool's ``Pong-v5``."""
 
-    def __init__(self, max_episode_steps: int = 2000):
+    def __init__(self, max_episode_steps: int = 2000,
+                 obs_mode: str = "gray84"):
+        if obs_mode not in OBS_MODES:
+            raise ValueError(
+                f"unknown obs_mode {obs_mode!r}; known: {OBS_MODES}"
+            )
+        self.obs_mode = obs_mode
+        obs_spec = (
+            ArraySpec((H, W), jnp.uint8, 0, 255) if obs_mode == "gray84"
+            else ArraySpec((RGB_H, RGB_W, 3), jnp.uint8, 0, 255)
+        )
         self.spec = EnvSpec(
             name="AtariLike-Pong-v5",
-            obs_spec=ArraySpec((H, W), jnp.uint8, 0, 255),
+            obs_spec=obs_spec,
             act_spec=ArraySpec((), jnp.int32, 0, 5),
             max_episode_steps=max_episode_steps,
             min_cost=4,          # frameskip
@@ -168,8 +193,51 @@ class AtariLike(Environment):
         return (s.score_us >= WIN_SCORE) | (s.score_them >= WIN_SCORE)
 
     def observe(self, s: AtariLikeState) -> jnp.ndarray:
+        if self.obs_mode == "rgb":
+            # native ALE screen; rendering is observe-only so dynamics
+            # are bitwise-unchanged vs the gray84 mode
+            return pong_render_reference(
+                s.ball_x, s.ball_y, s.paddle_y, s.enemy_y
+            )
         return self._render(s)
 
     def pre_step(self, s: AtariLikeState) -> AtariLikeState:
         # clear the score latch after step_cost consumed it
         return super().pre_step(s).replace(just_scored=jnp.bool_(False))
+
+    def as_batch(self) -> "AtariLikeBatch":
+        """Batched-native view: the served block's screens render in one
+        fused ``kernels/image`` call (Pallas on TPU; bit-identical jnp
+        form elsewhere)."""
+        return AtariLikeBatch(self)
+
+
+class AtariLikeBatch(VmapBatchEnv):
+    """Natively batched AtariLike: one fused render over the selected
+    block per recv (the ``MujocoLikeBatch`` idiom, applied to the
+    observation path).
+
+    Dynamics stay vmap-lifted — they are cheap masked scalar updates and
+    must match the per-lane path bitwise.  Only ``v_observe`` is
+    overridden: in ``rgb`` mode the whole block's 210 x 160 screens come
+    from ONE batched render (the Pallas kernel when compiled, the same
+    compare/select jnp core off-TPU — bitwise either way because the
+    render is exact f32 compares and integer selects).  Render-on-observe
+    is preserved: the engine's single ``v_observe`` per recv is the only
+    render, and XLA DCEs the finalize-path one.  ``gray84`` mode keeps
+    the generic vmap observe — the classic path is untouched.
+    """
+
+    def __init__(self, env: AtariLike, backend: str = "auto",
+                 block_n: int = 8):
+        super().__init__(env)
+        self.backend = resolve_backend(backend)
+        self.block_n = int(block_n)
+
+    def v_observe(self, s: AtariLikeState) -> jnp.ndarray:
+        if self.env.obs_mode != "rgb":
+            return super().v_observe(s)
+        return pong_render(
+            s.ball_x, s.ball_y, s.paddle_y, s.enemy_y,
+            backend=self.backend, block_n=self.block_n,
+        )

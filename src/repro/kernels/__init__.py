@@ -2,6 +2,9 @@
 #   flash_attention/  train/prefill attention (online-softmax K/V sweep)
 #   decode_attention/ flash-decoding (KV-chunk partials + tiny combine)
 #   env_step/         the paper's env-execution hot loop on the VPU
+#   image/            batched image preprocessing (grayscale / resize /
+#                     crop) + the Atari RGB render — the CuLE argument
 # Each has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
-# ref.py (pure-jnp oracle).  Validated in interpret mode on CPU; TPU is
-# the lowering target.
+# ref.py (pure-jnp oracle).  backend.py states the shared TPU/fallback
+# selection rule once (BACKENDS / default_backend / resolve_backend).
+# Validated in interpret mode on CPU; TPU is the lowering target.

@@ -1,0 +1,48 @@
+"""Shared kernel backend selection — the TPU/fallback rule, stated once.
+
+Every Pallas kernel family (``env_step``, ``image``) exposes the same
+backend enum on its public ops:
+
+  * ``"pallas"``           — the compiled Pallas kernel (TPU target),
+  * ``"pallas-interpret"`` — the same kernel in interpret mode
+    (CPU cross-checking of the kernel itself),
+  * ``"reference"``        — the packed pure-jnp oracle (``ref.py``),
+  * ``"vmap"``             — the generic per-lane form (vmap-lifted /
+    plain jnp), the off-TPU auto choice,
+  * ``"auto"``             — ``default_backend()``: compiled Pallas on
+    TPU, the vmap/jnp fallback everywhere else.
+
+Off-TPU the auto choice is the vmap/jnp form rather than the packed
+reference: the reference is bit-identical to the kernel when called
+directly, but embedding a *structurally* different HLO body in a larger
+program lets XLA CPU make different fusion/contraction choices at the
+ulp level for float-carried state — sharing the per-lane path's jaxpr
+keeps whole-rollout streams bitwise identical across the batched and
+per-lane engines (the conformance contract).  Families whose math is
+pure integer fixed-point (``kernels/image``) are bitwise-equal across
+ALL backends by construction and simply alias ``vmap`` to their jnp
+form.
+"""
+
+from __future__ import annotations
+
+import jax
+
+BACKENDS = ("auto", "pallas", "pallas-interpret", "reference", "vmap")
+
+
+def default_backend() -> str:
+    """'pallas' (compiled) on TPU; 'vmap' (the generic jnp/vmap form)
+    everywhere else — see the module docstring for why."""
+    return "pallas" if jax.default_backend() == "tpu" else "vmap"
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown kernel backend {backend!r}; known: {BACKENDS}"
+        )
+    return default_backend() if backend == "auto" else backend
+
+
+__all__ = ["BACKENDS", "default_backend", "resolve_backend"]

@@ -14,6 +14,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
+# the TPU/fallback rule is stated once in kernels/backend.py and shared
+# by every kernel family; re-exported here for backwards compatibility
+from repro.kernels.backend import (           # noqa: F401
+    BACKENDS,
+    default_backend,
+    resolve_backend,
+)
 from repro.kernels.env_step.kernel import env_substep_batch
 from repro.kernels.env_step.ref import (
     env_multi_substep_reference,
@@ -21,31 +28,6 @@ from repro.kernels.env_step.ref import (
     pack_state,
     unpack_state,
 )
-
-BACKENDS = ("auto", "pallas", "pallas-interpret", "reference", "vmap")
-
-
-def default_backend() -> str:
-    """'pallas' (compiled) on TPU; 'vmap' elsewhere.
-
-    Off-TPU the auto choice is the generic masked-loop over the
-    vmap-lifted substep rather than the packed jnp 'reference': the
-    reference is bit-identical to the kernel (and the env oracle) when
-    called directly, but embedding a *structurally* different HLO body
-    in a larger program lets XLA CPU make different fusion/contraction
-    choices at the ulp level — sharing the vmap path's jaxpr is the only
-    way to keep whole-rollout streams bitwise identical across the
-    batched and per-lane engines, which is the conformance contract.
-    The 'reference' and 'pallas-interpret' backends remain explicitly
-    selectable (kernel cross-checks, TPU-less kernel debugging).
-    """
-    return "pallas" if jax.default_backend() == "tpu" else "vmap"
-
-
-def resolve_backend(backend: str = "auto") -> str:
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown env_step backend {backend!r}; known: {BACKENDS}")
-    return default_backend() if backend == "auto" else backend
 
 
 @functools.partial(jax.jit, static_argnames=("n_sub", "block_n", "interpret"))

@@ -1,0 +1,265 @@
+"""Pure oracles + shared fixed-point math for the batched image kernels.
+
+Bitwise contract: every op in this family (grayscale, resize, crop, the
+Pong RGB render) is defined in INTEGER fixed-point arithmetic, so the
+compiled Pallas kernel, interpret mode, this jnp reference and the
+numpy mirror used by the host engines all produce bit-identical uint8
+outputs — there is no float rounding to diverge on (asserted by
+tests/test_image_kernels.py).
+
+  * grayscale — the ALE/OpenCV luma in 15-bit fixed point:
+    ``(9798 R + 19235 G + 3735 B + 2^14) >> 15`` (the coefficients are
+    ``round(c * 2^15)`` for c = .299/.587/.114 and sum to exactly 2^15,
+    so flat fields are preserved).
+  * resize — separable integer matrix multiply: per-axis weight rows
+    quantized to ``RESIZE_SHIFT``-bit fixed point with largest-remainder
+    rounding so every row sums to exactly ``2^RESIZE_SHIFT``; each pass
+    is ``round_shift(W @ x)``.  ``area`` (fractional box coverage, the
+    ALE/EnvPool downsampling) and ``bilinear`` (half-pixel centers) are
+    two weight constructions over the same pass.
+  * the matmuls run in f32: with pixels <= 255 and weights <= 2^8 every
+    product and partial sum is an integer < 2^24, hence exactly
+    representable in f32 whatever the contraction order — the f32
+    matmul IS the integer matmul, but lands on the MXU / BLAS instead
+    of a scalar integer loop.
+
+The Pong RGB render (210 x 160 x 3, the native ALE screen) is pure
+compares and selects of exact f32 index arithmetic — bitwise stable
+under any batching/broadcast layout, shared by the per-lane ``observe``
+and the batched Pallas kernel via ``_pong_plane_values``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------- #
+# grayscale (ALE/OpenCV luma, 15-bit fixed point)
+# ---------------------------------------------------------------------- #
+GRAY_SHIFT = 15
+GRAY_R, GRAY_G, GRAY_B = 9798, 19235, 3735   # sums to exactly 2**15
+
+RESIZE_SHIFT = 8
+RESIZE_METHODS = ("area", "bilinear")
+
+# the native ALE screen + Pong palette (background / player paddle /
+# enemy paddle / ball), drawn from the 84-grid game state of
+# envs/atari_like.py scaled by (RGB_H/84, RGB_W/84)
+RGB_H, RGB_W = 210, 160
+_GAME_H = _GAME_W = 84.0
+_PADDLE_HALF = 6.0              # envs/atari_like.PADDLE_LEN / 2
+PONG_BG = (144, 72, 17)
+PONG_PLAYER = (92, 186, 92)
+PONG_ENEMY = (213, 130, 74)
+PONG_BALL = (236, 236, 236)
+
+
+def grayscale_reference(rgb: jnp.ndarray) -> jnp.ndarray:
+    """(..., 3) uint8 RGB -> (...) uint8 luma, integer fixed point."""
+    rgb = jnp.asarray(rgb)
+    r = rgb[..., 0].astype(jnp.int32)
+    g = rgb[..., 1].astype(jnp.int32)
+    b = rgb[..., 2].astype(jnp.int32)
+    y = (GRAY_R * r + GRAY_G * g + GRAY_B * b + (1 << (GRAY_SHIFT - 1))
+         ) >> GRAY_SHIFT
+    return y.astype(jnp.uint8)
+
+
+def grayscale_np(rgb: np.ndarray) -> np.ndarray:
+    """Numpy mirror of ``grayscale_reference`` (bitwise)."""
+    rgb = np.asarray(rgb)
+    r = rgb[..., 0].astype(np.int32)
+    g = rgb[..., 1].astype(np.int32)
+    b = rgb[..., 2].astype(np.int32)
+    y = (GRAY_R * r + GRAY_G * g + GRAY_B * b + (1 << (GRAY_SHIFT - 1))
+         ) >> GRAY_SHIFT
+    return y.astype(np.uint8)
+
+
+# ---------------------------------------------------------------------- #
+# resize weight matrices (shared by every backend)
+# ---------------------------------------------------------------------- #
+def _quantize_row(w: np.ndarray, shift: int) -> np.ndarray:
+    """Quantize one non-negative weight row to int fixed point summing
+    to exactly ``2**shift`` (largest-remainder rounding, deterministic
+    stable tie-break)."""
+    total = 1 << shift
+    w = w / w.sum()
+    scaled = w * total
+    base = np.floor(scaled).astype(np.int64)
+    rem = scaled - base
+    deficit = total - int(base.sum())
+    order = np.argsort(-rem, kind="stable")
+    base[order[:deficit]] += 1
+    return base
+
+
+def _bilinear_rows(in_size: int, out_size: int) -> np.ndarray:
+    """Half-pixel-center bilinear taps (<= 2 per output row, edge
+    clamped)."""
+    rows = np.zeros((out_size, in_size), np.float64)
+    scale = in_size / out_size
+    for i in range(out_size):
+        src = (i + 0.5) * scale - 0.5
+        i0 = int(np.floor(src))
+        f = src - i0
+        for j, wj in ((i0, 1.0 - f), (i0 + 1, f)):
+            if wj > 0:
+                rows[i, min(max(j, 0), in_size - 1)] += wj
+    return rows
+
+
+def _area_rows(in_size: int, out_size: int) -> np.ndarray:
+    """Fractional box coverage: output row ``i`` averages the source
+    span ``[i*scale, (i+1)*scale)`` with edge pixels weighted by their
+    covered fraction (handles non-divisible sizes exactly)."""
+    rows = np.zeros((out_size, in_size), np.float64)
+    scale = in_size / out_size
+    for i in range(out_size):
+        lo, hi = i * scale, (i + 1) * scale
+        for j in range(int(np.floor(lo)), min(int(np.ceil(hi)), in_size)):
+            cover = min(hi, j + 1.0) - max(lo, float(j))
+            if cover > 0:
+                rows[i, j] = cover / scale
+    return rows
+
+
+@functools.lru_cache(maxsize=None)
+def resize_weights(in_size: int, out_size: int, method: str = "area",
+                   shift: int = RESIZE_SHIFT) -> np.ndarray:
+    """Integer fixed-point resampling matrix ``(out_size, in_size)``:
+    every row sums to exactly ``2**shift``.  Cached and read-only — the
+    single weight definition consumed by the Pallas kernel, the jnp
+    reference and the numpy mirror."""
+    if method not in RESIZE_METHODS:
+        raise ValueError(
+            f"unknown resize method {method!r}; known: {RESIZE_METHODS}"
+        )
+    if in_size < 1 or out_size < 1:
+        raise ValueError(f"bad resize {in_size} -> {out_size}")
+    rows = (_area_rows if method == "area" else _bilinear_rows)(
+        in_size, out_size
+    )
+    q = np.stack([_quantize_row(r, shift) for r in rows]).astype(np.int32)
+    q.setflags(write=False)
+    return q
+
+
+def _round_shift(x: jnp.ndarray, shift: int) -> jnp.ndarray:
+    """Round-to-nearest power-of-two downshift of integer-valued f32."""
+    return (x.astype(jnp.int32) + (1 << (shift - 1))) >> shift
+
+
+def resize_reference(img: jnp.ndarray, out_h: int, out_w: int,
+                     method: str = "area") -> jnp.ndarray:
+    """(..., H, W) uint8 -> (..., out_h, out_w) uint8, separable integer
+    fixed-point resampling (two f32 matmuls, integer-exact by bounds)."""
+    img = jnp.asarray(img)
+    h, w = img.shape[-2], img.shape[-1]
+    a = jnp.asarray(resize_weights(h, out_h, method), jnp.float32)
+    b = jnp.asarray(resize_weights(w, out_w, method), jnp.float32)
+    import jax
+
+    hp = jax.lax.Precision.HIGHEST
+    x = img.astype(jnp.float32)
+    t = jnp.einsum("oh,...hw->...ow", a, x, precision=hp)
+    t = _round_shift(t, RESIZE_SHIFT).astype(jnp.float32)
+    o = jnp.einsum("pw,...ow->...op", b, t, precision=hp)
+    return _round_shift(o, RESIZE_SHIFT).astype(jnp.uint8)
+
+
+def resize_np(img: np.ndarray, out_h: int, out_w: int,
+              method: str = "area") -> np.ndarray:
+    """Numpy mirror of ``resize_reference`` (bitwise): the same weight
+    matrices contracted in f64 (BLAS; exact for these integer bounds)
+    with the identical integer rounding shifts."""
+    img = np.asarray(img)
+    h, w = img.shape[-2], img.shape[-1]
+    a = resize_weights(h, out_h, method).astype(np.float64)
+    b = resize_weights(w, out_w, method).astype(np.float64)
+    half = 1 << (RESIZE_SHIFT - 1)
+    x = img.astype(np.float64)
+    # contract H with a's in-dim -> (..., W, out_h) -> (..., out_h, W)
+    t = np.moveaxis(np.tensordot(x, a, axes=([-2], [1])), -1, -2)
+    t = ((t.astype(np.int64) + half) >> RESIZE_SHIFT).astype(np.float64)
+    o = np.tensordot(t, b, axes=([-1], [1]))      # (..., out_h, out_w)
+    return ((o.astype(np.int64) + half) >> RESIZE_SHIFT).astype(np.uint8)
+
+
+# ---------------------------------------------------------------------- #
+# crop
+# ---------------------------------------------------------------------- #
+def check_crop(in_h: int, in_w: int, top: int, left: int,
+               height: int, width: int) -> None:
+    if (top < 0 or left < 0 or height < 1 or width < 1
+            or top + height > in_h or left + width > in_w):
+        raise ValueError(
+            f"crop [{top}:{top + height}, {left}:{left + width}] out of "
+            f"bounds for ({in_h}, {in_w})"
+        )
+
+
+def crop_reference(img, top: int, left: int, height: int, width: int):
+    """Static window crop of the trailing (H, W) dims (np or jnp)."""
+    check_crop(img.shape[-2], img.shape[-1], top, left, height, width)
+    return img[..., top:top + height, left:left + width]
+
+
+# ---------------------------------------------------------------------- #
+# the Pong RGB render (native 210 x 160 ALE screen)
+# ---------------------------------------------------------------------- #
+def _pong_plane_values(ys, xs, ball_x, ball_y, paddle_y, enemy_y):
+    """Compare/select core shared by the jnp reference and the Pallas
+    render kernel: ``ys``/``xs`` are f32 row/col index grids
+    broadcastable against the ``(..., 1, 1)`` game-state scalars.
+    Returns the (r, g, b) planes as int32."""
+    sy = jnp.float32(RGB_H / _GAME_H)
+    sx = jnp.float32(RGB_W / _GAME_W)
+    ball = ((jnp.abs(ys - ball_y * sy) <= sy)
+            & (jnp.abs(xs - ball_x * sx) <= sx))
+    pad = ((jnp.abs(ys - paddle_y * sy) <= _PADDLE_HALF * sy)
+           & (xs >= jnp.float32(RGB_W) - 3.0 * sx))
+    enemy = ((jnp.abs(ys - enemy_y * sy) <= _PADDLE_HALF * sy)
+             & (xs <= 2.0 * sx))
+    planes = []
+    for c in range(3):
+        v = jnp.where(
+            ball, jnp.int32(PONG_BALL[c]),
+            jnp.where(
+                pad, jnp.int32(PONG_PLAYER[c]),
+                jnp.where(enemy, jnp.int32(PONG_ENEMY[c]),
+                          jnp.int32(PONG_BG[c])),
+            ),
+        )
+        planes.append(v)
+    return tuple(planes)
+
+
+def _expand(v) -> jnp.ndarray:
+    return jnp.asarray(v, jnp.float32)[..., None, None]
+
+
+def pong_render_reference(ball_x, ball_y, paddle_y, enemy_y) -> jnp.ndarray:
+    """Game-state scalars (any matching batch shape, incl. scalars) ->
+    (..., 210, 160, 3) uint8 — the jnp form of the batched render."""
+    ys = jnp.arange(RGB_H, dtype=jnp.float32)[:, None]
+    xs = jnp.arange(RGB_W, dtype=jnp.float32)[None, :]
+    r, g, b = _pong_plane_values(
+        ys, xs, _expand(ball_x), _expand(ball_y),
+        _expand(paddle_y), _expand(enemy_y),
+    )
+    return jnp.stack([r, g, b], axis=-1).astype(jnp.uint8)
+
+
+__all__ = [
+    "GRAY_SHIFT", "GRAY_R", "GRAY_G", "GRAY_B",
+    "RESIZE_SHIFT", "RESIZE_METHODS", "RGB_H", "RGB_W",
+    "PONG_BG", "PONG_PLAYER", "PONG_ENEMY", "PONG_BALL",
+    "check_crop", "crop_reference",
+    "grayscale_np", "grayscale_reference",
+    "pong_render_reference",
+    "resize_np", "resize_reference", "resize_weights",
+]

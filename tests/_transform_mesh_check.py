@@ -8,6 +8,11 @@ forces D simulated host devices before jax locks the platform.  Checks:
     bitwise-identical across mesh sizes {1, 2, D} — shard count is a
     pure throughput knob even with per-lane transform state sharded
     alongside the env states;
+  * the full classic image pipeline (``PongClassic-v5``: RGB render ->
+    Grayscale -> Resize(84,84) -> FrameStack -> RewardClip, all fused
+    in the jitted recv) is likewise bitwise-identical across mesh
+    sizes and vs the single-device engine — the integer fixed-point
+    image ops leave no float ulp for shard-count to perturb;
   * ``NormalizeObs`` running moments are mesh-size-invariant (the psum
     merge of per-shard batch statistics; f32 summation order only);
   * the sharded transformed stream equals the single-device engine's,
@@ -43,13 +48,13 @@ STEPS = 4
 N = 4  # envs; divisible by every mesh size in {1, 2, 4}
 
 
-def pong_rollout(shards: int | None):
-    """Sync scripted rollout of the default (FrameStack) Pong pipeline;
+def pong_rollout(shards: int | None, task: str = "Pong-v5"):
+    """Sync scripted rollout of the task's preset pipeline;
     ``shards=None`` is the single-device engine."""
     if shards is None:
-        pool = make("Pong-v5", num_envs=N, seed=0)
+        pool = make(task, num_envs=N, seed=0)
     else:
-        pool = make("Pong-v5", num_envs=N, engine="device-sharded",
+        pool = make(task, num_envs=N, engine="device-sharded",
                     num_shards=shards, seed=0)
     ps, ts = pool.reset(jax.random.PRNGKey(0))
     step = jax.jit(pool.step)
@@ -98,6 +103,14 @@ def main() -> dict:
         got = [np.asarray(x) for x in pong_rollout(d)]
         ok_stream &= all(np.array_equal(a, b) for a, b in zip(ref, got))
     res["pong_stream_bitwise_all_meshes"] = bool(ok_stream)
+
+    # the classic image pipeline (Grayscale/Resize fused in-recv)
+    cref = [np.asarray(x) for x in pong_rollout(None, "PongClassic-v5")]
+    ok_classic = True
+    for d in meshes:
+        got = [np.asarray(x) for x in pong_rollout(d, "PongClassic-v5")]
+        ok_classic &= all(np.array_equal(a, b) for a, b in zip(cref, got))
+    res["classic_stream_bitwise_all_meshes"] = bool(ok_classic)
 
     streams, moments = {}, {}
     for d in meshes:

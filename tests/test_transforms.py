@@ -416,6 +416,7 @@ def test_transform_mesh_conformance_subprocess():
     res = json.loads(proc.stdout.strip().splitlines()[-1])
     assert res["devices"] == 4
     assert res["pong_stream_bitwise_all_meshes"]
+    assert res["classic_stream_bitwise_all_meshes"]
     assert res["norm_shard_copies_identical"]
     assert res["norm_moments_mesh_invariant"]
     assert res["norm_stream_mesh_close"]
