@@ -52,10 +52,11 @@ def run(csv_rows: list[str]) -> None:
     kd = jax.random.normal(ks[1], (2, 2, T, 64), jnp.float32)
     vd = jax.random.normal(ks[2], (2, 2, T, 64), jnp.float32)
     lens = jnp.array([T, T // 2], jnp.int32)
-    t_k = _time(lambda *a: decode_attention(*a, block_t=512), qd, kd, vd, lens)
+    t_k = _time(lambda *a: decode_attention(
+        *a, block_t=512, backend="pallas-interpret"), qd, kd, vd, lens)
     t_r = _time(decode_attention_reference, qd, kd, vd, lens)
     err = float(jnp.max(jnp.abs(
-        decode_attention(qd, kd, vd, lens)
+        decode_attention(qd, kd, vd, lens, backend="pallas-interpret")
         - decode_attention_reference(qd, kd, vd, lens)
     )))
     csv_rows.append(f"kernel_decode_attn_interpret,{t_k*1e6:.0f},err={err:.1e}")

@@ -64,6 +64,20 @@ ships full RGB screens to the host and runs the bitwise-identical
 numpy mirrors per step.  Writes ``BENCH_image.json``;
 ``--min-image-ratio`` gates CI on in-engine/wrapper FPS.
 
+``--decode`` benches the LLM-policy decode path (``rl/policy_lm.py``):
+(a) the KV-cached one-token-per-recv ``decode_step`` (per-lane static
+cache + ``kernels/decode_attention`` over ragged lengths) against the
+full-recompute no-cache forward over each lane's token history — the
+per-token cost a cache-less policy server pays — at N=32 on
+``TokenCopy-v0``; and (b) continuous batching (the engine's auto-reset
+keeps every served lane a live request) against run-to-completion
+static batches (lanes idle behind the batch's longest episode) on the
+ragged-generation-length mix ``TokenRagged-v0``.  Both sides of (b)
+run the IDENTICAL compiled program, so the ratio is pure utilization:
+useful tokens per lane-slot under each admission discipline.  Writes
+``BENCH_decode.json``; ``--min-decode-cached-ratio`` /
+``--min-decode-cb-ratio`` gate CI.
+
 Every artifact carries a shared ``meta`` header (git commit, jax
 version + platform, device count, resolved kernel backend, host core
 count) so BENCH_*.json files are comparable across machines/commits.
@@ -550,6 +564,128 @@ def run_ab(task: str = "Ant-v3", num_envs: int = 64, steps: int = 40,
     return rows, summary
 
 
+def bench_lm_collect(task: str, num_envs: int, steps: int, iters: int,
+                     cached: bool) -> tuple[float, np.ndarray]:
+    """(tokens/s, done stream (steps*iters, N)) for the LM-policy collect
+    loop — ``cached=True`` runs the KV-cached one-token-per-recv
+    ``decode_step``; ``cached=False`` re-runs the full no-cache forward
+    over each lane's history every step (the cache-less baseline).  One
+    recv serves one token per lane, so tokens = steps * N."""
+    import jax
+
+    from repro.core.registry import make
+    from repro.rl.policy_lm import LMPolicy, build_lm_collect_fn
+
+    pool = make(task, num_envs=num_envs)
+    policy = LMPolicy(pool.spec)
+    params = policy.place_params(policy.init(jax.random.PRNGKey(0)), pool)
+    collect = build_lm_collect_fn(pool, policy, steps, cached=cached)
+    ps, ts = pool.reset(jax.random.PRNGKey(1))
+    lanes = policy.init_lanes(num_envs)
+    # two warmups: the first compiles for reset-fresh inputs, the second
+    # for the self-feeding steady state the timed loop actually runs
+    # (the carry layouts differ, so one call would leave the recompile
+    # inside the timing)
+    for w in (2, 3):
+        ps, lanes, ts, traj, _ = collect(ps, lanes, params, ts,
+                                         jax.random.PRNGKey(w))
+    jax.block_until_ready(traj.reward)
+    dones = []
+    t0 = time.time()
+    for i in range(iters):
+        ps, lanes, ts, traj, _ = collect(ps, lanes, params, ts,
+                                         jax.random.PRNGKey(4 + i))
+        # sync emission order is priority-based, so serve-slot columns
+        # mix lanes across steps — scatter back to lane order by env_id
+        d, ids = np.asarray(traj.done), np.asarray(traj.env_id)
+        lane_done = np.zeros_like(d)
+        np.put_along_axis(lane_done, ids, d, axis=1)
+        dones.append(lane_done)
+    jax.block_until_ready(traj.reward)
+    dt = time.time() - t0
+    return steps * num_envs * iters / dt, np.concatenate(dones, axis=0)
+
+
+def _rtc_useful(done: np.ndarray) -> tuple[int, int]:
+    """(useful tokens, lane-slots spent) under run-to-completion static
+    batching, replayed from the engine's done stream.  ``done[t, lane]``
+    marks the obs at step t as the FIRST of a fresh episode, i.e. the
+    lane's request completed at step t.  A round starts with every lane
+    fresh; each lane contributes tokens until its first completion, then
+    idles until the slowest lane finishes; only completed rounds count."""
+    S, M = done.shape
+    useful, slots, t0 = 0, 0, 0
+    while True:
+        finish = []
+        for lane in range(M):
+            nxt = np.flatnonzero(done[t0 + 1:, lane])
+            if nxt.size == 0:
+                finish = None
+                break
+            finish.append(t0 + 1 + int(nxt[0]))
+        if finish is None:
+            break
+        end = max(finish)
+        useful += sum(f - t0 for f in finish)
+        slots += (end - t0) * M
+        t0 = end
+    return useful, slots
+
+
+def run_decode(num_envs: int = 32, steps: int = 48, iters: int = 3,
+               cb_steps: int = 64, task_cached: str = "TokenCopy-v0",
+               task_cb: str = "TokenRagged-v0") -> tuple[list[str], dict]:
+    """LLM-policy decode-path A/B (see --decode): (a) KV-cached
+    decode_step vs full-recompute forward, tokens/s at N=num_envs; (b)
+    continuous batching vs run-to-completion static batches on the
+    ragged-length mix — the identical compiled program replayed under
+    the RTC admission discipline via the done stream, so the ratio is
+    pure lane utilization."""
+    rows: list[str] = []
+    fps_cached, _ = bench_lm_collect(task_cached, num_envs, steps, iters,
+                                     cached=True)
+    fps_full, _ = bench_lm_collect(task_cached, num_envs, steps, iters,
+                                   cached=False)
+    cached_ratio = fps_cached / max(fps_full, 1e-9)
+    rows += [
+        f"decode_{task_cached}_cached_N{num_envs},"
+        f"{1e6/max(fps_cached,1e-9):.3f},{fps_cached:.0f} tokens/s",
+        f"decode_{task_cached}_fullrecompute_N{num_envs},"
+        f"{1e6/max(fps_full,1e-9):.3f},{fps_full:.0f} tokens/s",
+        f"decode_CACHED_RATIO,{cached_ratio:.3f},"
+        f"cached/full-recompute tokens-per-s at N={num_envs}",
+    ]
+    fps_cont, done = bench_lm_collect(task_cb, num_envs, cb_steps, iters,
+                                      cached=True)
+    useful, slots = _rtc_useful(done)
+    util = useful / slots if slots else 1.0
+    fps_rtc = fps_cont * util  # same wall-clock, fewer useful tokens
+    cb_ratio = 1.0 / max(util, 1e-9)
+    rows += [
+        f"decode_{task_cb}_continuous_N{num_envs},"
+        f"{1e6/max(fps_cont,1e-9):.3f},{fps_cont:.0f} useful tokens/s",
+        f"decode_{task_cb}_runtocompletion_N{num_envs},"
+        f"{1e6/max(fps_rtc,1e-9):.3f},{fps_rtc:.0f} useful tokens/s",
+        f"decode_CB_RATIO,{cb_ratio:.3f},"
+        f"continuous/run-to-completion useful tokens-per-s",
+    ]
+    summary = {
+        "num_envs": num_envs,
+        "task_cached": task_cached,
+        "cached_tok_s": fps_cached,
+        "full_recompute_tok_s": fps_full,
+        "cached_over_full": cached_ratio,
+        "task_cb": task_cb,
+        "continuous_tok_s": fps_cont,
+        "rtc_tok_s": fps_rtc,
+        "rtc_utilization": util,
+        "rtc_useful_tokens": useful,
+        "rtc_lane_slots": slots,
+        "continuous_over_rtc": cb_ratio,
+    }
+    return rows, summary
+
+
 def write_json(rows: list[str], extra: dict | None = None,
                path: str | None = None) -> str:
     """Persist the bench rows (and any mode-specific summary) as the
@@ -614,6 +750,18 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--min-transform-ratio", type=float, default=0.0,
                     help="fail (exit 1) if in-engine/wrapper FPS drops "
                          "below this (CI gate)")
+    ap.add_argument("--decode", action="store_true",
+                    help="LLM-policy decode-path A/B (rl/policy_lm.py): "
+                         "KV-cached decode_step vs full-recompute forward "
+                         "at N=32, and continuous batching vs "
+                         "run-to-completion static batches on "
+                         "TokenRagged-v0; writes BENCH_decode.json")
+    ap.add_argument("--min-decode-cached-ratio", type=float, default=0.0,
+                    help="fail (exit 1) if cached/full-recompute "
+                         "tokens-per-s drops below this (CI gate)")
+    ap.add_argument("--min-decode-cb-ratio", type=float, default=0.0,
+                    help="fail (exit 1) if continuous/run-to-completion "
+                         "useful-tokens-per-s drops below this (CI gate)")
     ap.add_argument("--task", default="TokenCopy-v0")
     ap.add_argument("--envs-per-shard", type=int, default=16)
     ap.add_argument("--num-envs", type=int, default=64)
@@ -674,6 +822,16 @@ def main(argv: list[str] | None = None) -> int:
         rows = run_mesh(args.mesh, args.task, args.envs_per_shard,
                         args.steps, args.iters)
         extra = {"mode": "mesh", "mesh": args.mesh}
+    elif args.decode:
+        # the gate is pinned at N=32 (the acceptance sizes), so --smoke
+        # only trims steps/iters; the cb stream still needs to span a
+        # few run-to-completion rounds (episode lengths 8/32)
+        steps, iters, cb_steps = (24, 1, 72) if args.smoke else (48, 3, 64)
+        rows, summary = run_decode(num_envs=32, steps=steps, iters=iters,
+                                   cb_steps=cb_steps)
+        extra = {"mode": "decode", "decode": summary}
+        if args.json is None:
+            args.json = os.path.join(ROOT, "BENCH_decode.json")
     elif args.image:
         if args.smoke:
             # N=64 for the same reason as --transforms; fewer steps —
@@ -753,6 +911,23 @@ def main(argv: list[str] | None = None) -> int:
             return 1
         print(f"[bench] image in-engine/wrapper ratio {ratio:.3f} >= "
               f"{args.min_image_ratio} OK")
+    if extra.get("mode") == "decode":
+        if args.min_decode_cached_ratio > 0:
+            ratio = extra["decode"]["cached_over_full"]
+            if ratio < args.min_decode_cached_ratio:
+                print(f"[bench] FAIL: cached/full-recompute ratio "
+                      f"{ratio:.3f} < {args.min_decode_cached_ratio}")
+                return 1
+            print(f"[bench] cached/full-recompute ratio {ratio:.3f} >= "
+                  f"{args.min_decode_cached_ratio} OK")
+        if args.min_decode_cb_ratio > 0:
+            ratio = extra["decode"]["continuous_over_rtc"]
+            if ratio < args.min_decode_cb_ratio:
+                print(f"[bench] FAIL: continuous/run-to-completion ratio "
+                      f"{ratio:.3f} < {args.min_decode_cb_ratio}")
+                return 1
+            print(f"[bench] continuous/run-to-completion ratio "
+                  f"{ratio:.3f} >= {args.min_decode_cb_ratio} OK")
     if extra.get("mode") == "transforms" and args.min_transform_ratio > 0:
         ratio = extra["transforms"]["ratio"]
         if ratio < args.min_transform_ratio:

@@ -1,78 +1,90 @@
-"""Batched LM serving demo: prefill + decode loop with the EnvPool-style
-async batching idea applied to token generation — requests join/leave the
-batch as they finish (the decode analogue of batch_size < num_envs).
+"""Scheduler-fed continuous-batching LM decode server on the pool's
+lane machinery (``serving/decode_pool.py`` + ``rl/policy_lm.py``).
 
-    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-0.6b --batch 8
+A fixed block of decode lanes serves a queue of requests with ragged
+prompt and generation lengths.  Each request is admitted into a free
+lane (prompt prefilled through the SAME cached one-token-per-step
+program the hot loop runs), decodes one token per step against its
+static per-lane KV cache via ``kernels/decode_attention``, and leaves
+the block the moment it finishes — a fresh prompt joins without any
+recompilation (fixed block shapes, masked lanes).  The run-to-completion
+baseline (``--static``) admits a new batch only when every lane has
+drained, which is the padding waste continuous batching reclaims.
+
+    PYTHONPATH=src python examples/serve_lm.py --lanes 8 --requests 32
+    PYTHONPATH=src python examples/serve_lm.py --static   # the baseline
+    PYTHONPATH=src python examples/serve_lm.py --schedule sjf
 """
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_smoke_config
-from repro.models import build_model
+from repro.core.specs import ArraySpec, EnvSpec
+from repro.rl.policy_lm import LMPolicy, default_policy_config
+from repro.serving import DecodePool
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-0.6b")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=64)
+    ap.add_argument("--lanes", type=int, default=8,
+                    help="decode-block width (lanes decoding in lockstep)")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--vocab", type=int, default=256)
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="max prompt length (ragged, 4..this)")
+    ap.add_argument("--max-new", type=int, default=48,
+                    help="long-request generation budget")
+    ap.add_argument("--short-frac", type=float, default=0.75,
+                    help="fraction of requests generating max-new/4 tokens")
+    ap.add_argument("--schedule", default="fifo", choices=["fifo", "sjf"])
+    ap.add_argument("--static", action="store_true",
+                    help="run-to-completion static batches instead of "
+                         "continuous batching")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_smoke_config(args.arch).replace(d_model=128, n_layers=4)
-    model = build_model(cfg)
-    key = jax.random.PRNGKey(0)
-    params = model.init(key)
-    B, P = args.batch, args.prompt_len
-    max_len = P + args.max_new
+    max_len = args.prompt_len + args.max_new + 1
+    spec = EnvSpec(
+        name="serve-lm",
+        obs_spec=ArraySpec((2,), jnp.int32, 0, args.vocab - 1),
+        act_spec=ArraySpec((), jnp.int32, 0, args.vocab - 1),
+        max_episode_steps=max_len,
+    )
+    policy = LMPolicy(
+        spec, default_policy_config(args.vocab, max_len), max_len=max_len
+    )
+    params = policy.init(jax.random.PRNGKey(args.seed))
 
-    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab, jnp.int32)
-    batch = {"tokens": prompts}
-    if cfg.family == "vlm":
-        batch["positions"] = jnp.broadcast_to(
-            jnp.arange(P)[None, :, None], (B, P, 3)
-        ).astype(jnp.int32)
-    if cfg.family == "encdec":
-        batch["frames"] = jax.random.normal(
-            key, (B, cfg.enc_seq, cfg.d_model), cfg.compute_dtype
-        )
+    rng = np.random.default_rng(args.seed)
+    prompts = [
+        list(rng.integers(0, args.vocab, rng.integers(4, args.prompt_len + 1)))
+        for _ in range(args.requests)
+    ]
+    budgets = [
+        max(args.max_new // 4, 1) if rng.random() < args.short_frac
+        else args.max_new
+        for _ in range(args.requests)
+    ]
 
-    prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=max_len))
-    decode = jax.jit(model.decode_step)
-
-    t0 = time.time()
-    logits, cache = prefill(params, batch)
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
-
-    # per-request random stop lengths: finished slots keep decoding padding
-    # (continuous batching would swap in new requests here)
-    rng = np.random.default_rng(0)
-    stops = rng.integers(args.max_new // 2, args.max_new, B)
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    done = np.zeros(B, bool)
-    t0 = time.time()
-    produced = 0
-    for t in range(args.max_new):
-        lg, cache = decode(params, tok, cache)
-        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
-        newly = (~done) & (t >= stops)
-        done |= newly
-        produced += int((~done).sum())
-        if done.all():
-            break
-    jax.block_until_ready(tok)
-    dt = time.time() - t0
-    print(f"arch={cfg.name} batch={B}")
-    print(f"prefill {P} tokens x {B}: {t_prefill*1e3:.0f} ms "
-          f"({B*P/t_prefill:,.0f} tok/s)")
-    print(f"decode: {produced} tokens in {dt*1e3:.0f} ms "
-          f"({produced/dt:,.0f} tok/s)")
+    pool = DecodePool(policy, num_lanes=args.lanes, max_new=args.max_new,
+                      schedule=args.schedule)
+    mode = "static (run-to-completion)" if args.static else "continuous"
+    # warm the compile caches so the reported numbers are steady-state
+    pool.serve(params, prompts[: args.lanes], continuous=not args.static,
+               max_new=budgets[: args.lanes])
+    outputs, stats = pool.serve(params, prompts,
+                                continuous=not args.static,
+                                max_new=budgets)
+    assert [len(o) for o in outputs] == budgets
+    print(f"mode={mode} schedule={args.schedule} lanes={args.lanes} "
+          f"requests={stats.requests}")
+    print(f"decoded {stats.total_tokens} tokens in {stats.decode_steps} "
+          f"block steps ({stats.wall_s*1e3:.0f} ms)")
+    print(f"lane utilization {stats.utilization:.1%}  "
+          f"throughput {stats.tokens_per_s:,.0f} tok/s")
 
 
 if __name__ == "__main__":

@@ -79,5 +79,22 @@ if [ -z "${CI_SKIP_BENCH:-}" ]; then
     # BENCH_image.json.
     python benchmarks/bench_throughput.py --image --smoke \
         --min-image-ratio 1.5
+
+    echo "== LLM-policy decode-path parity (kernel/carriage/engine) =="
+    # ragged-length kernel parity, bitwise KV-cache carriage under
+    # top-M selection, and engine-served greedy streams vs the
+    # standalone Model.decode_step serving stack (also tier-1;
+    # standalone for bench-only invocations)
+    python -m pytest -q tests/test_decode_policy.py
+
+    echo "== KV-cached decode + continuous-batching A/B (TokenCopy/TokenRagged) =="
+    # the decode-path acceptance gates: the cached one-token-per-recv
+    # decode_step must beat the full-recompute forward >= 3x per token
+    # at N=32 (typical larger — the baseline re-pays the whole prefix
+    # every token), and continuous batching must beat run-to-completion
+    # static batches >= 1.2x useful tokens/s on the ragged-length mix
+    # (typical ~2x at 75% short episodes).  Writes BENCH_decode.json.
+    python benchmarks/bench_throughput.py --decode --smoke \
+        --min-decode-cached-ratio 3.0 --min-decode-cb-ratio 1.2
 fi
 echo "CI OK"

@@ -74,6 +74,21 @@ are checkpointable on the functional engines:
 (global statistics are stored once and re-broadcast to the restoring
 pool's shard count), so preprocessing statistics survive training
 restarts.
+
+Cache-as-lane-state contract (the LLM-policy decode path,
+``rl/policy_lm.py``): policy-side per-lane state — the KV cache rows,
+cache lengths, and token histories of ``LMLaneState`` — follows the
+same carriage rules as ``PoolState.tf_state``.  Every leaf is
+lane-major SoA with leading dim ``num_envs``; the block a ``recv``
+serves is lifted with ``tree_gather(lanes, ts.env_id)``, updated by a
+fixed-shape block program, and written back with ``tree_scatter`` —
+never resized, so top-M selection doubles as continuous batching: a
+lane whose episode ended (``ts.done``) simply restarts its cache at
+position 0 when next served, and fresh lanes join the decode block
+without recompiling.  Like transform state, lane state never alters
+env dynamics, scheduling, or auto-reset points; it is policy-private
+carry that happens to be addressed by the same ``env_id`` routing the
+paper's §3.1 API already mandates.
 """
 
 from __future__ import annotations

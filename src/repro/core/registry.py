@@ -308,6 +308,12 @@ def _ensure_defaults() -> None:
         "TokenSkew-v0",
         lambda **kw: TokenEnv(**{"heavy_frac": 0.25, "heavy_scale": 8, **kw}),
     )
+    # ragged GENERATION lengths (75% of episodes end at ep_len/4): the
+    # continuous-batching serving mix — see bench_throughput --decode
+    register(
+        "TokenRagged-v0",
+        lambda **kw: TokenEnv(**{"short_frac": 0.75, "len_scale": 4, **kw}),
+    )
     register(
         "AntSkew-v3",
         lambda **kw: MujocoLike(**{"heavy_frac": 0.25, "heavy_iters": 4, **kw}),

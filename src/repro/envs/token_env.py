@@ -28,6 +28,7 @@ class TokenEnvState:
     ep_return: jnp.ndarray
     reward_acc: jnp.ndarray
     cost_scale: jnp.ndarray  # per-episode decode-cost multiplier (skew)
+    ep_len_draw: jnp.ndarray  # per-episode length (generation-length skew)
 
 
 class TokenEnv(Environment):
@@ -37,15 +38,27 @@ class TokenEnv(Environment):
     a serving mix where a fraction of requests run a far larger model /
     longer generation.  The draw comes from a ``fold_in`` of the episode
     init key, so the default config (``heavy_frac=0``) consumes no
-    extra randomness and all engines see identical skew assignments."""
+    extra randomness and all engines see identical skew assignments.
+
+    ``short_frac``/``len_scale`` skew episode LENGTH instead of step
+    cost (the continuous-batching workload, ``TokenRagged-v0``): each
+    episode terminates after ``ep_len // len_scale`` steps with
+    probability ``short_frac``, else runs the full ``ep_len`` — the
+    ragged generation-length mix where run-to-completion static
+    batching idles short lanes behind the batch's longest request.
+    The default ``short_frac=0`` draws every episode at ``ep_len``,
+    leaving trajectories bitwise unchanged."""
 
     def __init__(self, vocab: int = 256, ep_len: int = 32, ctx_len: int = 64,
-                 heavy_frac: float = 0.0, heavy_scale: int = 8):
+                 heavy_frac: float = 0.0, heavy_scale: int = 8,
+                 short_frac: float = 0.0, len_scale: int = 4):
         self.vocab = vocab
         self.ep_len = ep_len
         self.ctx_len = ctx_len
         self.heavy_frac = float(heavy_frac)
         self.heavy_scale = int(heavy_scale)
+        self.short_frac = float(short_frac)
+        self.len_scale = int(len_scale)
         base_max = 1 + ep_len // 8
         self.spec = EnvSpec(
             name="TokenEnv-copy-v0",
@@ -60,6 +73,10 @@ class TokenEnv(Environment):
         rng, sub = jax.random.split(key)
         target = jax.random.randint(sub, (self.ep_len,), 0, self.vocab, jnp.int32)
         heavy = jax.random.uniform(jax.random.fold_in(key, 7)) < self.heavy_frac
+        short = jax.random.uniform(jax.random.fold_in(key, 11)) < self.short_frac
+        ep_len_draw = jnp.where(
+            short, max(self.ep_len // self.len_scale, 1), self.ep_len
+        ).astype(jnp.int32)
         z = jnp.float32(0.0)
         return TokenEnvState(
             target=target,
@@ -69,6 +86,7 @@ class TokenEnv(Environment):
             ep_return=z,
             reward_acc=z,
             cost_scale=jnp.where(heavy, self.heavy_scale, 1).astype(jnp.int32),
+            ep_len_draw=ep_len_draw,
         )
 
     def substep(self, s: TokenEnvState, action) -> TokenEnvState:
@@ -89,7 +107,7 @@ class TokenEnv(Environment):
         return (jnp.int32(1) + s.t // 8) * s.cost_scale
 
     def terminal(self, s: TokenEnvState) -> jnp.ndarray:
-        return s.t >= self.ep_len
+        return s.t >= s.ep_len_draw
 
     def observe(self, s: TokenEnvState) -> jnp.ndarray:
         # context window: prompt (target prefix visible one ahead) plus

@@ -1,4 +1,14 @@
-"""jit'd public wrapper for the flash-decoding kernel."""
+"""jit'd public wrapper for the flash-decoding kernel.
+
+Backend selection follows the shared ``kernels/backend.py`` rule (same
+enum as the env_step and image families): ``"auto"`` resolves to the
+COMPILED Pallas kernel on TPU and to the pure-jnp form off-TPU —
+interpret mode is never a silent default on the hot path, it must be
+asked for explicitly (``backend="pallas-interpret"``, the CPU
+cross-check of the kernel itself).  Decode attention has no distinct
+per-lane vmap lifting — the packed reference IS the generic jnp form —
+so ``"vmap"`` aliases to the reference oracle.
+"""
 
 from __future__ import annotations
 
@@ -7,18 +17,23 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import resolve_backend
 from repro.kernels.decode_attention.kernel import decode_attention_fwd
 from repro.kernels.decode_attention.ref import decode_attention_reference
 
 
-@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_t", "backend"))
 def decode_attention(
     q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, lengths: jnp.ndarray,
-    *, block_t: int = 512, interpret: bool = True,
+    *, block_t: int = 512, backend: str = "auto",
 ) -> jnp.ndarray:
     """(B, H, D) query vs (B, Hkv, T, D) cache -> (B, H, D)."""
+    backend = resolve_backend(backend)
+    if backend in ("reference", "vmap"):
+        return decode_attention_reference(q, k, v, lengths)
     return decode_attention_fwd(
-        q, k, v, lengths, block_t=block_t, interpret=interpret
+        q, k, v, lengths, block_t=block_t,
+        interpret=(backend == "pallas-interpret"),
     )
 
 

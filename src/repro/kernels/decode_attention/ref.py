@@ -23,4 +23,8 @@ def decode_attention_reference(
     s = jnp.where(mask[:, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))
+    # length-0 lanes: every key is masked, so softmax would degenerate to
+    # uniform weights — define the output as 0 instead (what the kernel's
+    # sumexp-guarded combine produces; fresh lanes in a decode block).
+    o = jnp.where(lengths[:, None, None, None] > 0, o, 0.0)
     return o.reshape(B, H, D).astype(q.dtype)

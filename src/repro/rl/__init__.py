@@ -1,5 +1,6 @@
 from repro.rl.gae import gae
 from repro.rl.nets import ActorCritic
+from repro.rl.policy_lm import LMLaneState, LMPolicy, build_lm_collect_fn
 from repro.rl.ppo import (
     PPOConfig,
     train,
@@ -10,6 +11,7 @@ from repro.rl.ppo import (
 )
 from repro.rl.vtrace import VTraceReturns, vtrace
 
-__all__ = ["ActorCritic", "PPOConfig", "VTraceReturns", "gae", "train",
+__all__ = ["ActorCritic", "LMLaneState", "LMPolicy", "PPOConfig",
+           "VTraceReturns", "build_lm_collect_fn", "gae", "train",
            "train_device", "train_host", "train_host_pipelined",
            "train_pipelined", "vtrace"]

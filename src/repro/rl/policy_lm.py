@@ -1,0 +1,351 @@
+"""KV-cached transformer policy on the pool's hot loop (ROADMAP #5).
+
+The engines have only ever served cheap MLP policies; this module wires
+the repo's LM stack into the collect loop as an *autoregressive* policy
+— the Seed-RL / RLHF configuration where the policy is a decoder-only
+transformer and every ``recv`` decodes exactly ONE token per served
+lane against a persistent per-lane KV cache.
+
+The cache is policy *lane state* and rides the engine's existing
+machinery: ``LMLaneState`` holds one static-shape KV-cache row per env
+lane, laid out lane-major SoA (every leaf has leading dim ``num_envs``,
+like every ``PoolState`` leaf and like ``PoolState.tf_state``), so the
+block a ``recv`` serves is carried by the very same
+``tree_gather``/``tree_scatter``-by-``env_id`` idiom the engine uses
+for transform state.  Cache rows are pre-allocated at ``max_len`` and
+updated in place (the executorch-llama static-cache idiom) — fixed
+block shapes, no recompiles as lanes join/leave the decode block, which
+is what turns the scheduler's top-M selection into continuous batching:
+a finished lane's next serve simply restarts at ``length = 0``.
+
+Two forward paths share one parameter pytree (``models/transformer.py``
+layout, so ``Model.decode_step``/``lm_apply`` run the SAME weights):
+
+* ``decode_step`` — the hot path: one token per lane, per-lane ragged
+  ``lengths``, attention via ``kernels/decode_attention`` (flash
+  decoding), K/V written in place at each lane's own position.
+* ``full_forward`` — the A/B baseline: re-runs the full no-cache
+  ``lm_apply`` over each lane's token history every step (what a
+  cache-less policy server pays per token).  Causal masking makes the
+  padded tail harmless: the row gathered at ``length - 1`` attends
+  only to the valid prefix, so both paths emit the same distribution.
+
+Params are placed by ``distributed/sharding.py::policy_shardings``
+(replicate small nets over the env mesh; shard big ones FSDP-style).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.specs import EnvSpec, TimeStep
+from repro.kernels import decode_attention
+from repro.models.common import ModelConfig, dense_init
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    apply_rope,
+    rms_head_norm,
+)
+from repro.models.transformer import lm_apply, lm_init
+from repro.utils.pytree import pytree_dataclass, tree_gather, tree_scatter
+
+
+# --------------------------------------------------------------------- #
+# config / state
+# --------------------------------------------------------------------- #
+def default_policy_config(vocab: int, max_len: int = 64) -> ModelConfig:
+    """Tiny dense decoder used as the default LM policy backbone.
+
+    f32 compute keeps the cached ragged-decode path and the standalone
+    ``Model.decode_step`` path argmax-identical (the conformance pin);
+    ``scan_layers=True`` gives stacked layer params — the layout
+    ``lm_init`` shares with the serving stack."""
+    return ModelConfig(
+        name="lm-policy", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab=vocab, head_dim=16,
+        rope_theta=10_000.0, tie_embeddings=True, max_seq=max_len,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+        scan_layers=True, remat="none",
+    )
+
+
+@pytree_dataclass
+class LMLaneState:
+    """Per-lane policy state, lane-major SoA: leading dim = num_envs on
+    every leaf, so ``tree_gather``/``tree_scatter`` by the served block's
+    ``env_id`` carry it exactly like ``PoolState.tf_state``.
+
+    ``k``/``v``: (N, n_layers, Hkv, T, hd) — pre-allocated static cache
+    rows in the ``decode_attention`` layout, written in place at each
+    lane's own ``length``.  ``history``: (N, T) int32 token record (the
+    full-recompute baseline's input; free for the cached path).
+    """
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    length: jnp.ndarray   # (N,) int32 — valid cache entries per lane
+    history: jnp.ndarray  # (N, T) int32 — tokens consumed this episode
+
+
+class LMPolicy:
+    """KV-cached transformer policy over an ``EnvSpec`` token stream.
+
+    ``obs_slot`` picks which observation token the LM consumes each
+    recv (default: the newest revealed prompt token of ``TokenEnv``'s
+    context window, ``ctx_len // 2 - 1``).
+    """
+
+    def __init__(self, spec: EnvSpec, cfg: ModelConfig | None = None,
+                 max_len: int = 64, obs_slot: int | None = None,
+                 backend: str = "auto"):
+        vocab = int(spec.act_spec.maximum) + 1
+        self.cfg = cfg or default_policy_config(vocab, max_len)
+        if self.cfg.moe is not None or self.cfg.ssm is not None:
+            raise ValueError("LMPolicy supports dense transformer "
+                             "backbones only")
+        self.spec = spec
+        self.max_len = int(max_len)
+        if obs_slot is None:
+            obs_slot = int(spec.obs_spec.shape[0]) // 2 - 1
+        self.obs_slot = int(obs_slot)
+        self.backend = backend
+        # decode_attention needs T % block_t == 0; one chunk is plenty
+        # at lane-cache sizes (the chunking targets 32k serving caches)
+        self.block_t = self.max_len
+
+    # ------------------------------ init --------------------------- #
+    def init(self, key: jax.Array) -> dict[str, Any]:
+        k1, k2 = jax.random.split(key)
+        params = lm_init(k1, self.cfg)
+        # value head on the final hidden state (PPO-ready); an extra
+        # top-level key is invisible to lm_apply/Model.decode_step
+        params["value_head"] = {
+            "w": dense_init(k2, self.cfg.d_model, 1, self.cfg.param_dtype),
+            "b": jnp.zeros((1,), self.cfg.param_dtype),
+        }
+        return params
+
+    def init_lanes(self, num_envs: int) -> LMLaneState:
+        cfg = self.cfg
+        shape = (num_envs, cfg.n_layers, cfg.n_kv_heads, self.max_len,
+                 cfg.hd)
+        return LMLaneState(
+            k=jnp.zeros(shape, cfg.compute_dtype),
+            v=jnp.zeros(shape, cfg.compute_dtype),
+            length=jnp.zeros((num_envs,), jnp.int32),
+            history=jnp.zeros((num_envs, self.max_len), jnp.int32),
+        )
+
+    def place_params(self, params: Any, pool: Any) -> Any:
+        """Seed-RL placement over the pool's env mesh (ROADMAP #5):
+        replicate-if-small / shard-if-big via ``policy_shardings``."""
+        from repro.distributed.sharding import policy_shardings
+
+        mesh = getattr(pool, "mesh", None)
+        if mesh is None:
+            return params
+        shardings = policy_shardings(
+            mesh, params, axis_name=getattr(pool, "axis_name", "env")
+        )
+        return jax.device_put(params, shardings)
+
+    # ------------------------- cached decode ----------------------- #
+    def decode_step(
+        self,
+        params: dict[str, Any],
+        tokens: jnp.ndarray,   # (B,) int32 — one new token per lane
+        k_cache: jnp.ndarray,  # (B, n_layers, Hkv, T, hd)
+        v_cache: jnp.ndarray,
+        lengths: jnp.ndarray,  # (B,) int32 — the new token's position
+    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """One KV-cached token per lane with per-lane ragged lengths.
+
+        Returns ``(logits (B, V), value (B,), k_cache, v_cache)`` — the
+        caches updated in place at each lane's own position."""
+        cfg = self.cfg
+        cd = cfg.compute_dtype
+        B = tokens.shape[0]
+        pos = lengths  # position of the incoming token, per lane
+        x = params["embed"][tokens].astype(cd)              # (B, d)
+
+        def write_row(c: jnp.ndarray, row: jnp.ndarray, p: jnp.ndarray
+                      ) -> jnp.ndarray:
+            # c: (Hkv, T, hd), row: (Hkv, hd) — in-place static-cache
+            # update at this lane's own slot (per-lane dynamic slice)
+            return lax.dynamic_update_slice(c, row[:, None, :], (0, p, 0))
+
+        v_write = jax.vmap(write_row)
+
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda leaf: leaf[i], params["layers"])
+            ap = lp["attn"]
+            normed = apply_norm(lp["attn_norm"], x, cfg)    # (B, d)
+            q = (normed @ ap["wq"].astype(cd)).reshape(
+                B, 1, cfg.n_heads, cfg.hd)
+            kt = (normed @ ap["wk"].astype(cd)).reshape(
+                B, 1, cfg.n_kv_heads, cfg.hd)
+            vt = (normed @ ap["wv"].astype(cd)).reshape(
+                B, 1, cfg.n_kv_heads, cfg.hd)
+            if cfg.qk_norm:
+                q = rms_head_norm(ap["q_norm"], q)
+                kt = rms_head_norm(ap["k_norm"], kt)
+            q = apply_rope(q, pos[:, None], cfg)[:, 0]      # (B, H, hd)
+            kt = apply_rope(kt, pos[:, None], cfg)[:, 0]    # (B, Hkv, hd)
+            vt = vt[:, 0]
+            kc = v_write(k_cache[:, i], kt, pos)            # (B,Hkv,T,hd)
+            vc = v_write(v_cache[:, i], vt, pos)
+            k_cache = k_cache.at[:, i].set(kc)
+            v_cache = v_cache.at[:, i].set(vc)
+            # attend over the valid prefix INCLUDING the token just
+            # written (causal step t sees keys 0..t) — ragged lengths
+            # go straight to the flash-decoding kernel
+            attn = decode_attention(q, kc, vc, lengths + 1,
+                                    block_t=self.block_t,
+                                    backend=self.backend)
+            attn = attn.reshape(B, cfg.q_dim) @ ap["wo"].astype(cd)
+            x = x + attn
+            normed = apply_norm(lp["mlp_norm"], x, cfg)
+            x = x + apply_mlp(lp["mlp"], normed, cfg)
+
+        x = apply_norm(params["final_norm"], x, cfg)
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].T.astype(cd)
+        else:
+            logits = x @ params["lm_head"].astype(cd)
+        vh = params["value_head"]
+        value = (x @ vh["w"].astype(cd) + vh["b"].astype(cd))[:, 0]
+        return logits, value, k_cache, v_cache
+
+    # ---------------------- full-recompute baseline ----------------- #
+    def full_forward(
+        self,
+        params: dict[str, Any],
+        history: jnp.ndarray,  # (B, T) int32 — padded token history
+        lengths: jnp.ndarray,  # (B,) int32 — valid prefix per lane
+    ) -> jnp.ndarray:
+        """No-cache forward over the whole (padded) history — the
+        per-token cost a cache-less server pays.  Causal masking makes
+        the garbage tail invisible to the gathered row, so this emits
+        the SAME next-token distribution as ``decode_step``."""
+        logits_all, _, _ = lm_apply(params, history, self.cfg)
+        idx = jnp.clip(lengths - 1, 0, history.shape[1] - 1)
+        return jnp.take_along_axis(
+            logits_all, idx[:, None, None], axis=1)[:, 0]
+
+    # --------------------------- act ------------------------------- #
+    def extract_token(self, obs: jnp.ndarray) -> jnp.ndarray:
+        """The observation token the LM consumes this recv."""
+        return obs[..., self.obs_slot].astype(jnp.int32)
+
+    def _consume(self, lanes_blk: LMLaneState, ts: TimeStep
+                 ) -> tuple[jnp.ndarray, jnp.ndarray, LMLaneState]:
+        """Episode-boundary handling + history append for a served
+        block: ``ts.done`` marks lanes whose obs opens a FRESH episode,
+        so their cache restarts at position 0 — the lane leaves the
+        decode block and a new request joins, without any reshaping."""
+        pos = jnp.where(ts.done, 0, lanes_blk.length)
+        pos = jnp.minimum(pos, self.max_len - 1)  # static-cache clamp
+        tok = self.extract_token(ts.obs)
+        B = tok.shape[0]
+        hist = lanes_blk.history.at[jnp.arange(B), pos].set(tok)
+        return tok, pos, lanes_blk.replace(history=hist)
+
+    def act(
+        self,
+        params: dict[str, Any],
+        lanes: LMLaneState,
+        ts: TimeStep,
+        key: jax.Array | None = None,
+    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, LMLaneState]:
+        """One cached decode over the served block: gather the block's
+        lane rows by ``ts.env_id``, decode one token, scatter back.
+
+        Returns ``(actions, logp, value, lanes)``; greedy when ``key``
+        is None."""
+        blk = tree_gather(lanes, ts.env_id)
+        tok, pos, blk = self._consume(blk, ts)
+        logits, value, kc, vc = self.decode_step(
+            params, tok, blk.k, blk.v, pos)
+        blk = blk.replace(k=kc, v=vc, length=pos + 1)
+        actions, logp = _select(logits, key)
+        return actions, logp, value, tree_scatter(lanes, ts.env_id, blk)
+
+    def act_full(
+        self,
+        params: dict[str, Any],
+        lanes: LMLaneState,
+        ts: TimeStep,
+        key: jax.Array | None = None,
+    ) -> tuple[jnp.ndarray, jnp.ndarray, LMLaneState]:
+        """The cache-less twin of ``act``: same lane-state carriage,
+        but every step re-runs the full forward over the history."""
+        blk = tree_gather(lanes, ts.env_id)
+        _, pos, blk = self._consume(blk, ts)
+        logits = self.full_forward(params, blk.history, pos + 1)
+        blk = blk.replace(length=pos + 1)
+        actions, logp = _select(logits, key)
+        return actions, logp, tree_scatter(lanes, ts.env_id, blk)
+
+
+def _select(logits: jnp.ndarray, key: jax.Array | None
+            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    logp_all = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    if key is None:
+        actions = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        actions = jax.random.categorical(key, logits.astype(jnp.float32)
+                                         ).astype(jnp.int32)
+    logp = jnp.take_along_axis(logp_all, actions[:, None], axis=-1)[:, 0]
+    return actions, logp
+
+
+# --------------------------------------------------------------------- #
+# collect driver
+# --------------------------------------------------------------------- #
+def build_lm_collect_fn(
+    pool: Any,
+    policy: LMPolicy,
+    num_steps: int,
+    cached: bool = True,
+    greedy: bool = False,
+    donate: bool = True,
+) -> Callable:
+    """Device-resident collect with the LM policy's lane state in the
+    carry: ``collect(ps, lanes, params, last_ts, key) -> (ps, lanes,
+    last_ts, traj, actions)``.  The same donated ``lax.scan`` shape as
+    ``xla_loop.build_collect_fn`` — ``ps`` AND the KV cache stay on
+    device for the whole rollout.  ``cached=False`` swaps in the
+    full-recompute forward (the --decode A/B baseline)."""
+
+    def one_step(carry, key):
+        ps, ts, lanes, params = carry
+        k = None if greedy else key
+        if cached:
+            actions, _, _, lanes = policy.act(params, lanes, ts, k)
+        else:
+            actions, _, lanes = policy.act_full(params, lanes, ts, k)
+        ps, new_ts = pool.step(ps, actions, ts.env_id)
+        return (ps, new_ts, lanes, params), (ts, actions)
+
+    def collect(ps, lanes, params, last_ts, key):
+        keys = jax.random.split(key, num_steps)
+        (ps, last_ts, lanes, _), (traj, acts) = lax.scan(
+            one_step, (ps, last_ts, lanes, params), keys
+        )
+        return ps, lanes, last_ts, traj, acts
+
+    kwargs = {"donate_argnums": (0, 1)} if donate else {}
+    return jax.jit(collect, **kwargs)
+
+
+__all__ = [
+    "LMLaneState",
+    "LMPolicy",
+    "build_lm_collect_fn",
+    "default_policy_config",
+]

@@ -1,0 +1,13 @@
+"""Continuous-batching LM serving over the engine's lane machinery.
+
+``decode_pool.py`` is the serving-side twin of the RL collect loop:
+requests stream through a fixed block of decode lanes exactly the way
+episodes stream through the env pool — finished lanes leave the block
+and fresh prompts join without recompiling (static shapes, masked
+lanes), with the per-lane KV cache carried as lane-major SoA rows
+(``rl/policy_lm.LMPolicy``).
+"""
+
+from repro.serving.decode_pool import DecodePool, ServeStats
+
+__all__ = ["DecodePool", "ServeStats"]

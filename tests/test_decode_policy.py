@@ -1,0 +1,170 @@
+"""LLM-policy decode path (``rl/policy_lm.py`` + ``kernels/decode_attention``).
+
+Three layers of pins, bottom-up:
+
+* kernel: flash-decoding (interpret mode) vs the reference attention on
+  ragged per-lane lengths, including the length-0 (empty cache) and
+  length-T (full cache) corners;
+* carriage: the KV cache rides ``tree_gather``/``tree_scatter`` by the
+  served block's ``env_id`` exactly like ``PoolState.tf_state`` — a
+  round-trip under top-M selection must be BITWISE identical to a
+  per-lane numpy-indexing oracle;
+* engine: greedy decode through the pool's collect loop must emit the
+  same per-lane token streams as the standalone ``Model.decode_step``
+  serving stack replaying the same observation stream.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.registry import make
+from repro.core.specs import TimeStep
+from repro.envs.token_env import TokenEnv
+from repro.kernels import decode_attention, decode_attention_reference
+from repro.models.api import Model
+from repro.rl.policy_lm import (
+    LMLaneState,
+    LMPolicy,
+    build_lm_collect_fn,
+    default_policy_config,
+)
+
+
+# --------------------------------------------------------------------- #
+# kernel: ragged lengths vs reference
+# --------------------------------------------------------------------- #
+def test_decode_attention_ragged_parity():
+    B, H, Hkv, T, D = 5, 4, 2, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, T, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, T, D), jnp.float32)
+    # empty cache, single entry, mid-block, block-boundary, full cache
+    lengths = jnp.array([0, 1, 7, 8, T], jnp.int32)
+    out = decode_attention(q, k, v, lengths, block_t=8,
+                           backend="pallas-interpret")
+    ref = decode_attention_reference(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    # a length-0 lane attends to nothing and must return exactly zero
+    np.testing.assert_array_equal(np.asarray(out[0]), 0.0)
+
+
+# --------------------------------------------------------------------- #
+# carriage: gather/scatter round-trip under top-M selection
+# --------------------------------------------------------------------- #
+def _block_ts(spec, obs, done, env_id):
+    m = env_id.shape[0]
+    return TimeStep(
+        obs=obs,
+        reward=jnp.zeros((m,), jnp.float32),
+        done=done,
+        terminated=done,
+        truncated=jnp.zeros((m,), jnp.bool_),
+        env_id=env_id,
+        episode_return=jnp.zeros((m,), jnp.float32),
+        episode_length=jnp.zeros((m,), jnp.int32),
+        step_cost=jnp.ones((m,), jnp.int32),
+    )
+
+
+def test_kv_cache_roundtrip_under_topm_selection():
+    """Random top-M blocks decode against the pool-wide lane state via
+    ``policy.act`` (tree_gather/tree_scatter by env_id); the oracle runs
+    the IDENTICAL block compute but carries per-lane state with plain
+    numpy fancy indexing.  Every leaf must match bitwise — the cache is
+    lane state in exactly the ``PoolState.tf_state`` sense."""
+    env = TokenEnv(vocab=64, ep_len=8, ctx_len=16)
+    spec = env.spec
+    policy = LMPolicy(spec, cfg=default_policy_config(64, 16), max_len=16,
+                      backend="reference")
+    params = policy.init(jax.random.PRNGKey(1))
+    N, M, rounds = 6, 3, 10
+    lanes = policy.init_lanes(N)
+    oracle = {f: np.asarray(getattr(lanes, f)).copy()
+              for f in ("k", "v", "length", "history")}
+    rng = np.random.default_rng(2)
+    for _ in range(rounds):
+        ids_np = rng.choice(N, size=M, replace=False)
+        ids = jnp.asarray(ids_np, jnp.int32)
+        obs = jnp.asarray(rng.integers(0, 64, (M, 16)), jnp.int32)
+        done = jnp.asarray(rng.random(M) < 0.3)
+        ts = _block_ts(spec, obs, done, ids)
+
+        actions, _, _, lanes = policy.act(params, lanes, ts)
+
+        # oracle: same block program, numpy-indexed carriage
+        blk = LMLaneState(
+            k=jnp.asarray(oracle["k"][ids_np]),
+            v=jnp.asarray(oracle["v"][ids_np]),
+            length=jnp.asarray(oracle["length"][ids_np]),
+            history=jnp.asarray(oracle["history"][ids_np]),
+        )
+        tok, pos, blk = policy._consume(blk, ts)
+        logits, _, kc, vc = policy.decode_step(params, tok, blk.k, blk.v,
+                                               pos)
+        oracle["k"][ids_np] = np.asarray(kc)
+        oracle["v"][ids_np] = np.asarray(vc)
+        oracle["length"][ids_np] = np.asarray(pos + 1)
+        oracle["history"][ids_np] = np.asarray(blk.history)
+        np.testing.assert_array_equal(
+            np.asarray(actions),
+            np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32)))
+
+    for f in ("k", "v", "length", "history"):
+        np.testing.assert_array_equal(np.asarray(getattr(lanes, f)),
+                                      oracle[f], err_msg=f)
+
+
+# --------------------------------------------------------------------- #
+# engine: pool-served greedy decode vs standalone Model.decode_step
+# --------------------------------------------------------------------- #
+def test_engine_decode_matches_standalone_model():
+    """The acceptance pin: per-lane decoded token streams through the
+    engine's collect loop (KV cache as lane state, ragged lengths,
+    flash-decoding) are identical to the standalone serving stack
+    (``Model.decode_step``, scalar cache len, one lane at a time)
+    replaying the same observation stream greedily."""
+    N, steps, max_len = 4, 20, 16
+    pool = make("TokenCopy-v0", num_envs=N, vocab=32, ep_len=6, ctx_len=8)
+    policy = LMPolicy(pool.spec, cfg=default_policy_config(32, max_len),
+                      max_len=max_len, backend="reference")
+    params = policy.init(jax.random.PRNGKey(3))
+    collect = build_lm_collect_fn(pool, policy, steps, cached=True,
+                                  greedy=True, donate=False)
+    ps, ts = pool.reset(jax.random.PRNGKey(4))
+    lanes = policy.init_lanes(N)
+    _, _, _, traj, acts = collect(ps, lanes, params, ts,
+                                  jax.random.PRNGKey(5))
+    # sync emission order is priority-based: serve-slot columns can mix
+    # lanes across steps, so scatter every per-step block back to lane
+    # order by env_id before the per-lane replay
+    ids = np.asarray(traj.env_id)   # (steps, N)
+    obs = np.zeros_like(np.asarray(traj.obs))
+    done = np.zeros_like(np.asarray(traj.done))
+    acts_lane = np.zeros_like(np.asarray(acts))
+    for t in range(steps):
+        obs[t, ids[t]] = np.asarray(traj.obs)[t]
+        done[t, ids[t]] = np.asarray(traj.done)[t]
+        acts_lane[t, ids[t]] = np.asarray(acts)[t]
+    acts = acts_lane
+
+    model = Model(policy.cfg)
+    step_fn = jax.jit(model.decode_step)
+    for lane in range(N):
+        cache = model.init_cache(1, max_len)
+        for t in range(steps):
+            if done[t, lane]:
+                cache = model.init_cache(1, max_len)
+            tok = jnp.asarray([[obs[t, lane, policy.obs_slot]]], jnp.int32)
+            logits, cache = step_fn(params, tok, cache)
+            want = int(jnp.argmax(logits[0]))
+            assert want == int(acts[t, lane]), (
+                f"lane {lane} step {t}: engine {int(acts[t, lane])} "
+                f"vs standalone {want}")
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-v"]))

@@ -68,7 +68,8 @@ def test_decode_attention_sweep(B, H, Hkv, T, D, bt, dtype):
     k = jax.random.normal(ks[1], (B, Hkv, T, D), dtype)
     v = jax.random.normal(ks[2], (B, Hkv, T, D), dtype)
     lengths = jax.random.randint(ks[3], (B,), 1, T + 1)
-    out = decode_attention(q, k, v, lengths, block_t=bt)
+    out = decode_attention(q, k, v, lengths, block_t=bt,
+                           backend="pallas-interpret")
     ref = decode_attention_reference(q, k, v, lengths)
     np.testing.assert_allclose(
         out.astype(jnp.float32), ref.astype(jnp.float32), **tol(dtype)
@@ -83,7 +84,8 @@ def test_decode_attention_length_edge_cases():
     v = jax.random.normal(ks[2], (2, 2, 256, 32))
     for lens in ([1, 256], [256, 1], [128, 255]):
         lengths = jnp.array(lens, jnp.int32)
-        out = decode_attention(q, k, v, lengths, block_t=64)
+        out = decode_attention(q, k, v, lengths, block_t=64,
+                               backend="pallas-interpret")
         ref = decode_attention_reference(q, k, v, lengths)
         np.testing.assert_allclose(out, ref, atol=3e-5, rtol=3e-5)
 
