@@ -78,6 +78,17 @@ useful tokens per lane-slot under each admission discipline.  Writes
 ``BENCH_decode.json``; ``--min-decode-cached-ratio`` /
 ``--min-decode-cb-ratio`` gate CI.
 
+``--obs`` A/Bs the in-graph telemetry overhead (``obs/telemetry.py``):
+the device sync hot loop (the resident random-collect scan) with the
+``PoolState`` counters on (``obs=True``, the default) vs off
+(``obs=False`` — zero telemetry leaves, the exact pre-telemetry XLA
+program).  Best-of-iters FPS per side so 2-core CI timer noise doesn't
+masquerade as overhead; the summary embeds the instrumented pool's
+``stats()`` snapshot and its ``MetricsRegistry`` export.  Writes
+``BENCH_obs.json``; ``--min-obs-ratio`` gates CI on obs-on/obs-off FPS
+(the acceptance bound is 0.97 — instrumentation costs <= 3% of the hot
+loop).
+
 Every artifact carries a shared ``meta`` header (git commit, jax
 version + platform, device count, resolved kernel backend, host core
 count) so BENCH_*.json files are comparable across machines/commits.
@@ -686,6 +697,73 @@ def run_decode(num_envs: int = 32, steps: int = 48, iters: int = 3,
     return rows, summary
 
 
+def run_obs(task: str = "TokenCopy-v0", num_envs: int = 64,
+            steps: int = 40, iters: int = 3) -> tuple[list[str], dict]:
+    """Telemetry-overhead A/B (--obs): the device sync hot loop with
+    in-graph counters on vs off.  Same resident collect program both
+    sides; ``obs=False`` drops every telemetry leaf, so the off side IS
+    the pre-telemetry program.  The two sides' timed iterations are
+    INTERLEAVED (on, off, on, off, ...) and each side keeps its best —
+    sequential phases would let slow CPU-frequency/load drift on the
+    shared CI box bias the ratio by far more than the effect under
+    measurement."""
+    import jax
+
+    from repro.core.device_pool import DeviceEnvPool
+    from repro.core.registry import _jax_env
+    from repro.core.xla_loop import build_random_collect_fn
+    from repro.obs.metrics import MetricsRegistry, publish_pool_stats
+    from repro.obs.telemetry import stats_to_jsonable
+
+    def make_side(obs: bool):
+        env = _jax_env(task)
+        pool = DeviceEnvPool(env, num_envs, num_envs, mode="sync", obs=obs)
+        collect = build_random_collect_fn(pool, num_steps=steps)
+        ps, ts = pool.reset(jax.random.PRNGKey(0))
+        ps, ts, traj, _ = collect(ps, None, ts, jax.random.PRNGKey(1))
+        jax.block_until_ready(traj.reward)
+        return {"pool": pool, "collect": collect, "ps": ps, "ts": ts,
+                "best": 0.0}
+
+    sides = {True: make_side(True), False: make_side(False)}
+    for i in range(iters):
+        for obs in (True, False):
+            s = sides[obs]
+            t0 = time.time()
+            s["ps"], s["ts"], traj, _ = s["collect"](
+                s["ps"], None, s["ts"], jax.random.PRNGKey(2 + i))
+            jax.block_until_ready(traj.reward)
+            s["best"] = max(s["best"], float(traj.step_cost.sum())
+                            / (time.time() - t0))
+    fps_obs, fps_off = sides[True]["best"], sides[False]["best"]
+    pool, ps = sides[True]["pool"], sides[True]["ps"]
+    ratio = fps_obs / max(fps_off, 1e-9)
+    # the instrumented side's own counters prove the telemetry ran and
+    # land in the artifact through the unified registry
+    stats = pool.stats(ps)
+    registry = MetricsRegistry()
+    publish_pool_stats(registry, stats, engine="device", task=task)
+    rows = [
+        f"obs_{task}_on_N{num_envs},{1e6/max(fps_obs,1e-9):.3f},"
+        f"{fps_obs:.0f} {fps_unit(task)}/s",
+        f"obs_{task}_off_N{num_envs},{1e6/max(fps_off,1e-9):.3f},"
+        f"{fps_off:.0f} {fps_unit(task)}/s",
+        f"obs_RATIO,{ratio:.3f},obs-on/obs-off FPS (best of {iters})",
+    ]
+    summary = {
+        "task": task,
+        "num_envs": num_envs,
+        "steps": steps,
+        "iters": iters,
+        "fps_obs_on": fps_obs,
+        "fps_obs_off": fps_off,
+        "ratio": ratio,
+        "stats": stats_to_jsonable(stats),
+        "metrics": registry.snapshot(),
+    }
+    return rows, summary
+
+
 def write_json(rows: list[str], extra: dict | None = None,
                path: str | None = None) -> str:
     """Persist the bench rows (and any mode-specific summary) as the
@@ -762,6 +840,14 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--min-decode-cb-ratio", type=float, default=0.0,
                     help="fail (exit 1) if continuous/run-to-completion "
                          "useful-tokens-per-s drops below this (CI gate)")
+    ap.add_argument("--obs", action="store_true",
+                    help="in-graph telemetry overhead A/B "
+                         "(obs/telemetry.py): device sync hot loop with "
+                         "PoolState counters on vs off; writes "
+                         "BENCH_obs.json")
+    ap.add_argument("--min-obs-ratio", type=float, default=0.0,
+                    help="fail (exit 1) if obs-on/obs-off FPS drops "
+                         "below this (CI gate; acceptance bound 0.97)")
     ap.add_argument("--task", default="TokenCopy-v0")
     ap.add_argument("--envs-per-shard", type=int, default=16)
     ap.add_argument("--num-envs", type=int, default=64)
@@ -822,6 +908,16 @@ def main(argv: list[str] | None = None) -> int:
         rows = run_mesh(args.mesh, args.task, args.envs_per_shard,
                         args.steps, args.iters)
         extra = {"mode": "mesh", "mesh": args.mesh}
+    elif args.obs:
+        if args.smoke:
+            # more, shorter iters: best-of keeps the ratio honest on
+            # noisy 2-core CI without stretching the smoke budget
+            args.steps, args.iters = 24, 4
+        rows, summary = run_obs(args.task, args.num_envs, args.steps,
+                                args.iters)
+        extra = {"mode": "obs", "obs": summary}
+        if args.json is None:
+            args.json = os.path.join(ROOT, "BENCH_obs.json")
     elif args.decode:
         # the gate is pinned at N=32 (the acceptance sizes), so --smoke
         # only trims steps/iters; the cb stream still needs to span a
@@ -928,6 +1024,14 @@ def main(argv: list[str] | None = None) -> int:
                 return 1
             print(f"[bench] continuous/run-to-completion ratio "
                   f"{ratio:.3f} >= {args.min_decode_cb_ratio} OK")
+    if extra.get("mode") == "obs" and args.min_obs_ratio > 0:
+        ratio = extra["obs"]["ratio"]
+        if ratio < args.min_obs_ratio:
+            print(f"[bench] FAIL: obs-on/obs-off ratio {ratio:.3f} < "
+                  f"{args.min_obs_ratio}")
+            return 1
+        print(f"[bench] obs-on/obs-off ratio {ratio:.3f} >= "
+              f"{args.min_obs_ratio} OK")
     if extra.get("mode") == "transforms" and args.min_transform_ratio > 0:
         ratio = extra["transforms"]["ratio"]
         if ratio < args.min_transform_ratio:

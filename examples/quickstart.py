@@ -30,6 +30,12 @@ act = np.zeros(16, dtype=np.int32)
 ps, ts = env.step(ps, act, ts.env_id)
 print("step reward:", np.asarray(ts.reward)[:4], "env_id:", np.asarray(ts.env_id)[:4])
 
+# every engine carries its own counters (obs/telemetry.py); stats() is
+# the one host-crossing — the hot loop above never synced for them
+s = env.stats(ps)
+print("pool stats: recvs=%d served=%d stepped=%d occupancy=%.2f"
+      % (s["recvs"], s["served"], s["stepped"], s["occupancy"]))
+
 # ---- asynchronous mode (paper A.3): recv/send ------------------------- #
 env = repro.make("Pong-v5", num_envs=16, batch_size=8)  # async: M < N
 handle, recv, send, step = env.xla()                    # paper Appendix E

@@ -96,5 +96,20 @@ if [ -z "${CI_SKIP_BENCH:-}" ]; then
     # (typical ~2x at 75% short episodes).  Writes BENCH_decode.json.
     python benchmarks/bench_throughput.py --decode --smoke \
         --min-decode-cached-ratio 3.0 --min-decode-cb-ratio 1.2
+
+    echo "== telemetry conformance (stats() on all six engines, mesh 1,2,4) =="
+    # the obs/ subsystem's engine-conformance + mesh-invariance tests
+    # (also tier-1 above; standalone for bench-only invocations)
+    python -m pytest -q tests/test_obs.py
+
+    echo "== telemetry-overhead A/B gate (obs on vs off, device sync) =="
+    # the instrumentation must stay in-graph integer noise: obs-on FPS
+    # >= 0.97x obs-off on the random-collect hot loop (acceptance bound
+    # is <= 3% overhead; typical parity on this CI — the counters are a
+    # handful of int32 adds against a full env step).  Writes
+    # BENCH_obs.json with both sides, the stats() snapshot, and the
+    # metrics-registry export.
+    python benchmarks/bench_throughput.py --obs --smoke \
+        --min-obs-ratio 0.97
 fi
 echo "CI OK"

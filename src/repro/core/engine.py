@@ -75,6 +75,14 @@ from repro.core.specs import TimeStep
 from repro.core.transforms import TransformPipeline
 from repro.envs.base import Environment
 from repro.envs.batch import as_batch_env
+from repro.obs.telemetry import (
+    init_telemetry,
+    record_finished,
+    record_serve,
+    snapshot_device,
+    telemetry_local,
+    telemetry_shard,
+)
 from repro.utils.pytree import pytree_dataclass, tree_gather
 
 ENV_AXIS = "env"
@@ -149,6 +157,15 @@ class PoolState:
     # so the classic engine behavior (and its goldens) is
     # bitwise-unchanged.
     tf_state: Any = ()
+    # in-graph engine counters (obs/telemetry.py): a ``Telemetry``
+    # pytree updated inside the jitted recv/tick bodies — per-lane
+    # leaves carry the N dim, per-shard partial sums the (D,) dim —
+    # and read on the host only by an explicit ``pool.stats()``
+    # snapshot.  Counters never feed back into env math, scheduling,
+    # or RNG, so served streams stay bitwise-unchanged; ``obs=False``
+    # makes this the empty tuple (zero leaves — the exact pre-
+    # telemetry program, the ``bench_throughput --obs`` baseline).
+    telemetry: Any = ()
 
 
 class MeshEnvPool:
@@ -176,6 +193,7 @@ class MeshEnvPool:
         schedule: str | Scheduler = "fifo",
         sched_patience: float = 1.0,
         transforms: Any = (),
+        obs: bool = True,
     ):
         if batch_size is None:
             batch_size = num_envs
@@ -205,6 +223,12 @@ class MeshEnvPool:
         self.num_envs = int(num_envs)
         self.batch_size = int(batch_size)
         self.mode = mode
+        # in-graph telemetry (obs/telemetry.py): counters ride on
+        # PoolState and update inside the jitted recv bodies.  They
+        # never feed env math/scheduling/RNG, so served streams are
+        # bitwise-unchanged; obs=False drops every telemetry leaf —
+        # the exact pre-telemetry XLA program (the bench baseline).
+        self.obs = bool(obs)
         self._n_local = self.num_envs // d
         self._m_local = self.batch_size // d
         # selection policy (core/scheduler.py): which M/D lanes each
@@ -263,6 +287,8 @@ class MeshEnvPool:
         return ps.replace(
             tick=ps.tick[0], rng=ps.rng[0],
             tf_state=self._tf_local(ps.tf_state),
+            telemetry=telemetry_local(ps.telemetry)
+            if self.obs else ps.telemetry,
         )
 
     def _shard_view(self, ps: PoolState) -> PoolState:
@@ -270,6 +296,8 @@ class MeshEnvPool:
         return ps.replace(
             tick=ps.tick[None], rng=ps.rng[None],
             tf_state=self._tf_shard(ps.tf_state),
+            telemetry=telemetry_shard(ps.telemetry)
+            if self.obs else ps.telemetry,
         )
 
     def _smap(self, f, n_in: int, n_out: int = 1):
@@ -306,6 +334,7 @@ class MeshEnvPool:
             tick=jnp.int32(0),
             rng=rng,
             tf_state=self.pipeline.init(n),
+            telemetry=init_telemetry(n) if self.obs else (),
         )
 
     def _init_from_keys_impl(self, env_keys: jax.Array, rng: jax.Array
@@ -396,7 +425,19 @@ class MeshEnvPool:
         )
 
     def _recv_topm(self, ps: PoolState) -> tuple[PoolState, TimeStep]:
-        idx = self.scheduler.select(self._sched_view(ps), self._m_local)
+        full_block = self._m_local == ps.phase.shape[0]
+        if self.obs:
+            idx, overdue = self.scheduler.select_info(
+                self._sched_view(ps), self._m_local
+            )
+            # queue-wait (recv ticks since the action was enqueued),
+            # read BEFORE ``complete`` advances the tick.  A full-size
+            # block serves every lane, so wait stays in lane order and
+            # record_serve takes its scatter-free fast path.
+            wait = (ps.tick - ps.send_tick if full_block
+                    else ps.tick - ps.send_tick[idx])
+        else:
+            idx = self.scheduler.select(self._sched_view(ps), self._m_local)
 
         sel_states = tree_gather(ps.env_states, idx)
         sel_actions = ps.actions[idx]
@@ -446,6 +487,13 @@ class MeshEnvPool:
             r_cost=ps.r_cost.at[idx].set(out.step_cost),
             tick=ss.tick,
         )
+        if self.obs:
+            ps = ps.replace(
+                telemetry=record_serve(
+                    ps.telemetry, idx, wait, need_step,
+                    out.step_cost, overdue, full_block=full_block,
+                )
+            )
         # stored r_* results stay RAW; the pipeline runs at serve time
         # (masked mode serves stored results through the same path, so
         # both recv flavors emit identical transformed streams)
@@ -487,7 +535,7 @@ class MeshEnvPool:
             fin_states,
             states,
         )
-        return ps.replace(
+        new = ps.replace(
             env_states=states,
             progress=progress,
             phase=jnp.where(finished, READY, ps.phase),
@@ -500,6 +548,13 @@ class MeshEnvPool:
             r_ep_length=jnp.where(finished, fin_ts.episode_length, ps.r_ep_length),
             r_cost=jnp.where(finished, ps.cost, ps.r_cost),
         )
+        if self.obs:
+            # substep accounting belongs to the tick that finished the
+            # work; the serve is recorded later with stepped_mask=False
+            new = new.replace(
+                telemetry=record_finished(ps.telemetry, finished, ps.cost)
+            )
+        return new
 
     def _recv_masked(self, ps: PoolState) -> tuple[PoolState, TimeStep]:
         m = self._m_local
@@ -524,7 +579,21 @@ class MeshEnvPool:
             step_cost=ps.r_cost[idx],
         )
         ss = self.scheduler.complete(self._sched_view(ps), idx)
+        if self.obs:
+            # wait since the step COMPLETED (``_tick`` stamps send_tick
+            # at finish); substeps were already counted per-tick, so
+            # the serve records with stepped_mask=False
+            wait = ps.tick - ps.send_tick[idx]
         ps = ps.replace(phase=ss.phase, tick=ss.tick)
+        if self.obs:
+            ps = ps.replace(
+                telemetry=record_serve(
+                    ps.telemetry, idx, wait,
+                    jnp.zeros(idx.shape, jnp.bool_),
+                    jnp.zeros(idx.shape, jnp.int32),
+                    jnp.int32(0),
+                )
+            )
         return self._serve(ps, idx, out)
 
     def _local_recv(self, ps: PoolState) -> tuple[PoolState, TimeStep]:
@@ -598,6 +667,20 @@ class MeshEnvPool:
     def reset(self, key: jax.Array) -> tuple[PoolState, TimeStep]:
         """Sync-style reset: init + drain the first batch of M results."""
         return self._jit_reset(key)
+
+    # ------------------------------------------------------------------ #
+    # telemetry snapshot (core/protocol.py ``stats()`` contract)
+    # ------------------------------------------------------------------ #
+    def stats(self, ps: PoolState) -> dict:
+        """Host snapshot of the in-graph counters — the ONLY point where
+        telemetry crosses to the host.  Per-shard partial sums are summed
+        over D (integer adds: bitwise mesh-size-invariant); ``recvs``
+        comes from the replicated tick, shard 0's copy."""
+        if not self.obs:
+            raise RuntimeError(
+                "telemetry disabled: pool was constructed with obs=False"
+            )
+        return snapshot_device(ps.telemetry, ps.tick)
 
     # ------------------------------------------------------------------ #
     # paper Appendix E: jittable handle API
@@ -675,12 +758,13 @@ def make_pool(
     batched: bool | None = None,
     schedule: str | Scheduler = "fifo",
     transforms: Any = (),
+    obs: bool = True,
 ) -> MeshEnvPool:
     """EnvPool constructor with the paper's mode convention: sync iff
     batch_size in (None, num_envs) — which is exactly the engine's own
     ``mode=None`` default."""
     return MeshEnvPool(env, num_envs, batch_size, mode=mode, batched=batched,
-                       schedule=schedule, transforms=transforms)
+                       schedule=schedule, transforms=transforms, obs=obs)
 
 
 __all__ = [

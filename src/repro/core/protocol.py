@@ -89,6 +89,28 @@ without recompiling.  Like transform state, lane state never alters
 env dynamics, scheduling, or auto-reset points; it is policy-private
 carry that happens to be addressed by the same ``env_id`` routing the
 paper's §3.1 API already mandates.
+
+Telemetry-as-PoolState contract (``obs/telemetry.py``): every engine
+exposes ``stats()`` — a host snapshot of the engine's own counters
+(recvs, per-lane serves, queue-wait ticks and their fixed-edge
+histogram, served/stepped totals and their occupancy ratio, substep
+cost sums, scheduler overdue-band admissions).  On the functional
+engines the counters are a ``Telemetry`` pytree riding on ``PoolState``
+(the ``tf_state`` carriage pattern: per-lane ``(N,)`` leaves partition
+with the env states, per-shard partial sums carry the ``(D,)`` dim),
+updated INSIDE the jitted recv/tick bodies as fixed-size integer ops
+and crossing to the host only at the explicit ``stats(ps)`` call —
+never on the hot path, never via collectives (integer partial sums
+are summed on the host, so snapshots are bitwise mesh-size-invariant
+at every D).  Host engines mirror the same counters in numpy
+(``HostTelemetry``) with identical semantics, so ``stats()`` is
+engine-conformant: the same scripted rollout yields the same counter
+values on every engine (tests/test_obs.py).  Like transform and lane
+state, telemetry never feeds back into env math, scheduling, or RNG —
+served streams (and goldens) are bitwise-unchanged with it on, and
+``obs=False`` at construction strips every counter leaf, recovering
+the exact uninstrumented program (``stats()`` then raises
+``RuntimeError``).
 """
 
 from __future__ import annotations
@@ -115,6 +137,8 @@ class EnvPool(Protocol):
     def step(self, *args: Any, **kwargs: Any) -> Any: ...
 
     def reset(self, *args: Any, **kwargs: Any) -> Any: ...
+
+    def stats(self, *args: Any, **kwargs: Any) -> Any: ...
 
 
 @runtime_checkable
@@ -211,6 +235,14 @@ class BoundEnvPool:
             self._ps, ts = self._jit_step(self._ps, actions, env_ids)
             return ts
         return to_timestep(self.pool.step(np.asarray(actions), np.asarray(env_ids)))
+
+    def stats(self) -> dict:
+        """Engine telemetry snapshot (the ``stats()`` contract): the
+        functional engines read their in-graph counters off the owned
+        ``PoolState``; host engines return their numpy mirror."""
+        if self.functional:
+            return self.pool.stats(self._ps)
+        return self.pool.stats()
 
     def close(self) -> None:
         if hasattr(self.pool, "close"):

@@ -114,6 +114,7 @@ def make(
     sched_patience: float = 1.0,
     cost_ema_alpha: float = 1.0,
     transforms: Any = None,
+    obs: bool = True,
     **env_kwargs: Any,
 ):
     """Create a vectorized env pool, EnvPool-style.
@@ -141,6 +142,12 @@ def make(
     ``[FrameStack(4), RewardClip()]`` — replaces it, and ``[]`` gives
     the raw env stream.  ``pool.spec`` always reflects the transformed
     observation layout.
+
+    ``obs`` (default True) enables engine telemetry: the in-graph
+    counters on the device family, the numpy mirror on the host
+    engines — surfaced by ``pool.stats()`` (``obs/telemetry.py``).
+    ``obs=False`` strips every counter for an instrumentation-free
+    pool (the ``bench_throughput --obs`` baseline).
     """
     _ensure_defaults()
     tfs = resolve_transforms(transforms, _TRANSFORMS.get(task_id, ()))
@@ -158,7 +165,8 @@ def make(
             mode = "sync" if batch_size in (None, num_envs) else "async"
         return DeviceEnvPool(env, num_envs, batch_size, mode=mode,
                              batched=batched, schedule=schedule,
-                             sched_patience=sched_patience, transforms=tfs)
+                             sched_patience=sched_patience, transforms=tfs,
+                             obs=obs)
 
     if engine == "device-sharded":
         from repro.core.sharded_pool import ShardedDeviceEnvPool
@@ -168,7 +176,7 @@ def make(
             env, num_envs, batch_size,
             mesh=mesh if mesh is not None else num_shards,
             batched=batched, schedule=schedule,
-            sched_patience=sched_patience, transforms=tfs,
+            sched_patience=sched_patience, transforms=tfs, obs=obs,
         )
 
     if engine == "thread":
@@ -184,7 +192,8 @@ def make(
         ]
         return ThreadEnvPool(fns, batch_size=batch_size,
                              num_threads=num_threads, schedule=schedule,
-                             cost_ema_alpha=cost_ema_alpha, transforms=tfs)
+                             cost_ema_alpha=cost_ema_alpha, transforms=tfs,
+                             obs=obs)
 
     if engine in ("forloop", "subprocess") and schedule != "fifo":
         raise ValueError(
@@ -204,7 +213,7 @@ def make(
             ))
             for i in range(num_envs)
         ]
-        return ForLoopEnv(fns, transforms=tfs)
+        return ForLoopEnv(fns, transforms=tfs, obs=obs)
 
     if engine == "subprocess":
         from repro.core.baselines import SubprocessEnv
@@ -217,6 +226,7 @@ def make(
             num_workers=num_threads,
             spec=env.spec,
             transforms=tfs,
+            obs=obs,
         )
 
     raise ValueError(f"unknown engine {engine!r}; known: {ENGINES}")

@@ -156,6 +156,16 @@ class Scheduler:
         _, idx = lax.top_k(-self.priority(ss), m)
         return idx.astype(jnp.int32)
 
+    def select_info(self, ss: SchedState, m: int
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """``(idx, overdue_admits)`` — the selection plus the scalar
+        int32 count of lanes admitted through an overdue/deadline band
+        this recv (the telemetry signal, ``obs/telemetry.py``).  The
+        base policies have no deadline band, so the count is 0 and
+        ``idx`` is exactly ``select``'s — the engine can call this
+        unconditionally without perturbing fifo/sjf selections."""
+        return self.select(ss, m), jnp.int32(0)
+
     def select_ready(self, ss: SchedState, m: int) -> jnp.ndarray:
         """Completion-order pick among READY lanes only — the masked
         (event-driven tick) engine's recv, where results materialize by
@@ -269,6 +279,10 @@ class HierarchicalScheduler(Scheduler):
         return -neg_top[-1]                           # (D*m)-th smallest
 
     def select(self, ss: SchedState, m: int) -> jnp.ndarray:
+        return self.select_info(ss, m)[0]
+
+    def select_info(self, ss: SchedState, m: int
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
         tau = self._tau(ss, m)
         age = (ss.tick - ss.send_tick).astype(jnp.float32)
         cost = ss.cost.astype(jnp.float32)
@@ -306,7 +320,11 @@ class HierarchicalScheduler(Scheduler):
             ),
         )
         _, idx = lax.top_k(-pri, m)
-        return idx.astype(jnp.int32)
+        idx = idx.astype(jnp.int32)
+        # telemetry signal (obs/telemetry.py): how many of the selected
+        # lanes rode the overdue band this recv — a fixed-size scalar
+        # derived from masks already computed, no extra comms
+        return idx, jnp.sum(overdue[idx].astype(jnp.int32))
 
 
 # --------------------------------------------------------------------- #

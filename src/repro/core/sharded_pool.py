@@ -36,6 +36,7 @@ def ShardedDeviceEnvPool(
     schedule: str | Scheduler = "fifo",
     sched_patience: float = 1.0,
     transforms: Any = (),
+    obs: bool = True,
 ) -> MeshEnvPool:
     """Back-compat constructor: the unified mesh engine with ``mesh``
     defaulting to all available devices (paper §4.1 scale-out).  N and M
@@ -46,7 +47,7 @@ def ShardedDeviceEnvPool(
         env, num_envs, batch_size, mode=mode, mesh=mesh,
         axis_name=axis_name, aging=aging, batched=batched,
         schedule=schedule, sched_patience=sched_patience,
-        transforms=transforms,
+        transforms=transforms, obs=obs,
     )
 
 

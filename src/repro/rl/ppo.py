@@ -71,6 +71,8 @@ import numpy as np
 
 from repro.core.device_pool import DeviceEnvPool
 from repro.core.protocol import EnvPool, is_functional
+from repro.obs.metrics import MetricsRegistry, publish_history
+from repro.obs.trace import Tracer
 from repro.rl.gae import gae
 from repro.rl.nets import ActorCritic
 from repro.rl.vtrace import vtrace
@@ -224,17 +226,20 @@ def _episode_metrics(traj_dones, traj_ep_ret):
 
 
 def _record(history: list[dict], rec: dict, episodes: int, ep_sum: float,
-            log_fn) -> None:
+            log_fn, registry: MetricsRegistry | None = None) -> None:
     """Append one iteration record, carrying ``mean_return`` forward when
     the iteration completed zero episodes (previously ``ep_sum / 0``
     produced NaN, which breaks strict-JSON serialization of the
-    history)."""
+    history).  With a ``registry``, the record is also published as
+    ``ppo_*`` metrics (obs/metrics.py)."""
     if episodes > 0:
         mean_return = ep_sum / episodes
     else:
         mean_return = history[-1]["mean_return"] if history else 0.0
     rec = dict(rec, episodes=episodes, mean_return=float(mean_return))
     history.append(rec)
+    if registry is not None:
+        publish_history(registry, rec)
     if log_fn:
         log_fn(rec)
 
@@ -471,6 +476,8 @@ def train_host(
     seed: int = 0,
     log_fn: Callable[[dict], None] | None = None,
     hidden: tuple[int, ...] = (256, 128, 64),
+    tracer: Tracer | None = None,
+    registry: MetricsRegistry | None = None,
 ):
     """Returns (state, net, history, profile) where profile has the paper's
     four timing buckets: env_step / inference / train / other.
@@ -480,7 +487,11 @@ def train_host(
     the fence the ``time.time()`` around ``sample``/``update`` measures
     dispatch, and the compute silently leaks into whichever bucket
     blocks next (historically ``env_step``, inflating the paper's
-    Fig. 4 env share).
+    Fig. 4 env share).  The buckets are ``obs/trace.py`` fenced spans:
+    pass a ``tracer`` to also get the per-span Chrome trace
+    (``tracer.dump("trace.json")``); the returned profile is its
+    ``totals()``.  A ``registry`` receives each iteration record as
+    ``ppo_*`` metrics.
 
     ``spec`` defaults to ``env_pool.spec`` (every protocol engine
     carries it); the explicit argument remains for backward compat.
@@ -514,7 +525,10 @@ def train_host(
     else:
         out = env_pool.reset()
 
-    prof = {"env_step": 0.0, "inference": 0.0, "train": 0.0, "other": 0.0}
+    # ONE fencing implementation: each bucket is an obs/trace.py span;
+    # ``sp.fence(...)`` supplies the outputs block_until_ready must wait
+    # for before the span closes, exactly the old hand-rolled discipline
+    tr = tracer if tracer is not None else Tracer()
     history = []
     n_iters = max(1, cfg.total_steps // steps_per_iter)
     t_start = time.time()
@@ -523,49 +537,46 @@ def train_host(
                                  ("obs", "actions", "logp", "values",
                                   "rewards", "dones", "ep_ret")}
         for t in range(cfg.num_steps):
-            t0 = time.time()
-            key, ks = jax.random.split(key)
-            obs = jnp.asarray(out["obs"])
-            a, logp, v, _ = sample(state.params, obs, ks)
-            # fence the bucket: the dispatch returns futures; without
-            # blocking, inference compute would be billed to env_step
-            jax.block_until_ready((a, logp, v))
-            a_np = np.asarray(a)
-            t1 = time.time()
-            prof["inference"] += t1 - t0
-            new_out = env_pool.step(a_np, out["env_id"])
-            t2 = time.time()
-            prof["env_step"] += t2 - t1
-            traj["obs"].append(obs)
-            traj["actions"].append(a)
-            traj["logp"].append(logp)
-            traj["values"].append(v)
-            traj["rewards"].append(np.asarray(new_out["reward"]))
-            traj["dones"].append(np.asarray(new_out["done"]))
-            traj["ep_ret"].append(np.asarray(new_out["episode_return"]))
-            out = new_out
-            prof["other"] += time.time() - t2
+            with tr.span("inference") as sp:
+                key, ks = jax.random.split(key)
+                obs = jnp.asarray(out["obs"])
+                a, logp, v, _ = sample(state.params, obs, ks)
+                # fence the bucket: the dispatch returns futures; without
+                # blocking, inference compute would be billed to env_step
+                sp.fence((a, logp, v))
+                a_np = np.asarray(a)
+            with tr.span("env_step"):
+                new_out = env_pool.step(a_np, out["env_id"])
+            with tr.span("other"):
+                traj["obs"].append(obs)
+                traj["actions"].append(a)
+                traj["logp"].append(logp)
+                traj["values"].append(v)
+                traj["rewards"].append(np.asarray(new_out["reward"]))
+                traj["dones"].append(np.asarray(new_out["done"]))
+                traj["ep_ret"].append(
+                    np.asarray(new_out["episode_return"])
+                )
+                out = new_out
 
-        t0 = time.time()
-        rewards = jnp.asarray(np.stack(traj["rewards"]))
-        dones = jnp.asarray(np.stack(traj["dones"]))
-        values = jnp.stack(traj["values"])
-        _, last_v = forward(state.params, jnp.asarray(out["obs"]))
-        adv, ret = gae_fn(rewards, values, dones, last_v)
-        rollout = {
-            "obs": jnp.stack(traj["obs"]),
-            "actions": jnp.stack(traj["actions"]),
-            "logp": jnp.stack(traj["logp"]),
-            "values": values,
-            "adv": adv, "ret": ret,
-        }
-        jax.block_until_ready((adv, ret))   # GAE time belongs to other
-        prof["other"] += time.time() - t0
-        t0 = time.time()
-        key, ku = jax.random.split(key)
-        state, metrics = update(state, rollout, ku)
-        jax.block_until_ready(metrics["loss"])
-        prof["train"] += time.time() - t0
+        with tr.span("other") as sp:   # GAE time belongs to other
+            rewards = jnp.asarray(np.stack(traj["rewards"]))
+            dones = jnp.asarray(np.stack(traj["dones"]))
+            values = jnp.stack(traj["values"])
+            _, last_v = forward(state.params, jnp.asarray(out["obs"]))
+            adv, ret = gae_fn(rewards, values, dones, last_v)
+            rollout = {
+                "obs": jnp.stack(traj["obs"]),
+                "actions": jnp.stack(traj["actions"]),
+                "logp": jnp.stack(traj["logp"]),
+                "values": values,
+                "adv": adv, "ret": ret,
+            }
+            sp.fence((adv, ret))
+        with tr.span("train") as sp:
+            key, ku = jax.random.split(key)
+            state, metrics = update(state, rollout, ku)
+            sp.fence(metrics["loss"])
 
         done_arr = np.stack(traj["dones"])
         rets = np.stack(traj["ep_ret"])[done_arr]
@@ -574,7 +585,11 @@ def train_host(
             "time_s": time.time() - t_start,
             **{k: float(v) for k, v in metrics.items()},
         }
-        _record(history, rec, int(rets.size), float(rets.sum()), log_fn)
+        _record(history, rec, int(rets.size), float(rets.sum()), log_fn,
+                registry)
+    totals = tr.totals()
+    prof = {k: totals.get(k, 0.0)
+            for k in ("env_step", "inference", "train", "other")}
     return state, net, history, prof
 
 
@@ -588,6 +603,8 @@ def train_host_pipelined(
     seed: int = 0,
     log_fn: Callable[[dict], None] | None = None,
     hidden: tuple[int, ...] = (256, 128, 64),
+    tracer: Tracer | None = None,
+    registry: MetricsRegistry | None = None,
 ):
     """The pipelined driver over a host engine — Appendix D's queues on
     an actual hot path.
@@ -606,7 +623,10 @@ def train_host_pipelined(
 
     Returns ``(state, net, history, profile)``; the profile buckets are
     ``actor_wait`` (learner time blocked on the queue — env stepping
-    that did NOT overlap), ``train`` and ``other``.
+    that did NOT overlap), ``train`` and ``other`` — ``obs/trace.py``
+    fenced spans, same as ``train_host`` (pass a ``tracer`` for the
+    Chrome trace; the tracer's per-thread buffers keep the learner's
+    spans separate from any actor-side instrumentation).
     """
     if spec is None:
         spec = env_pool.spec
@@ -694,42 +714,39 @@ def train_host_pipelined(
     thread = threading.Thread(target=actor, daemon=True)
     thread.start()
 
-    prof = {"actor_wait": 0.0, "train": 0.0, "other": 0.0}
+    tr = tracer if tracer is not None else Tracer()
     history: list[dict] = []
     n_iters = max(1, cfg.total_steps // steps_per_iter)
     t_start = time.time()
     try:
         for it in range(n_iters):
-            t0 = time.time()
-            blocks = []
-            for _ in range(cfg.num_steps):
-                while True:
-                    if failure:
-                        raise RuntimeError(
-                            "pipelined actor thread died"
-                        ) from failure[0]
-                    try:
-                        blocks.append(queue.take(timeout=5.0))
-                        break
-                    except TimeoutError:
-                        continue
-            prof["actor_wait"] += time.time() - t0
+            with tr.span("actor_wait"):
+                blocks = []
+                for _ in range(cfg.num_steps):
+                    while True:
+                        if failure:
+                            raise RuntimeError(
+                                "pipelined actor thread died"
+                            ) from failure[0]
+                        try:
+                            blocks.append(queue.take(timeout=5.0))
+                            break
+                        except TimeoutError:
+                            continue
 
-            t0 = time.time()
-            traj = {
-                k: jnp.asarray(np.stack([b[k] for b in blocks]))
-                for k in ("obs", "actions", "logp", "rewards", "dones",
-                          "ep_ret")
-            }
-            traj["last_obs"] = jnp.asarray(blocks[-1]["next_obs"])
-            prof["other"] += time.time() - t0
+            with tr.span("other"):
+                traj = {
+                    k: jnp.asarray(np.stack([b[k] for b in blocks]))
+                    for k in ("obs", "actions", "logp", "rewards",
+                              "dones", "ep_ret")
+                }
+                traj["last_obs"] = jnp.asarray(blocks[-1]["next_obs"])
 
-            t0 = time.time()
-            key, ku = jax.random.split(key)
-            state, metrics = update(state, traj, ku)
-            jax.block_until_ready(metrics["loss"])
-            published["params"] = state.params   # the learner->actor push
-            prof["train"] += time.time() - t0
+            with tr.span("train") as sp:
+                key, ku = jax.random.split(key)
+                state, metrics = update(state, traj, ku)
+                sp.fence(metrics["loss"])
+                published["params"] = state.params  # learner->actor push
 
             dones = np.stack([b["dones"] for b in blocks])
             rets = np.stack([b["ep_ret"] for b in blocks])[dones]
@@ -738,10 +755,14 @@ def train_host_pipelined(
                 "time_s": time.time() - t_start,
                 **{k: float(v) for k, v in metrics.items()},
             }
-            _record(history, rec, int(rets.size), float(rets.sum()), log_fn)
+            _record(history, rec, int(rets.size), float(rets.sum()),
+                    log_fn, registry)
     finally:
         stop.set()
         thread.join(timeout=10.0)
+    totals = tr.totals()
+    prof = {k: totals.get(k, 0.0)
+            for k in ("actor_wait", "train", "other")}
     return state, net, history, prof
 
 

@@ -37,6 +37,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.obs.metrics import MetricsRegistry, publish_serve_stats
+from repro.obs.trace import Tracer
 from repro.rl.policy_lm import LMPolicy, _select
 from repro.utils.pytree import pytree_dataclass
 
@@ -78,7 +80,8 @@ class DecodePool:
     lanes driven by an ``LMPolicy`` backbone (see module docstring)."""
 
     def __init__(self, policy: LMPolicy, num_lanes: int, max_new: int,
-                 eos_token: int | None = None, schedule: str = "fifo"):
+                 eos_token: int | None = None, schedule: str = "fifo",
+                 registry: MetricsRegistry | None = None):
         if schedule not in ("fifo", "sjf"):
             raise ValueError(f"unknown serving schedule {schedule!r}")
         self.policy = policy
@@ -86,6 +89,9 @@ class DecodePool:
         self.max_new = int(max_new)
         self.eos_token = eos_token
         self.schedule = schedule
+        # obs/metrics.py sink: every serve() publishes its ServeStats
+        # (decode_* counters + utilization/throughput gauges)
+        self.registry = registry
         self._jit_step = jax.jit(self._step_impl)
         self._jit_admit = jax.jit(self._admit_impl)
 
@@ -186,8 +192,6 @@ class DecodePool:
         """Decode every request; returns (per-request token lists,
         throughput/utilization stats).  ``max_new`` optionally skews the
         per-request generation budget (default: the pool's)."""
-        import time
-
         n_req = len(prompts)
         budgets = ([self.max_new] * n_req if max_new is None
                    else [int(m) for m in max_new])
@@ -204,51 +208,60 @@ class DecodePool:
         lanes = self.init_lanes()
         outputs: list[list[int]] = [[] for _ in range(n_req)]
         steps = 0
-        t0 = time.time()
-        while pending or bool(np.asarray(lanes.active).any()):
-            active_np = np.asarray(lanes.active)
-            free = np.flatnonzero(~active_np)
-            all_free = not active_np.any()
-            may_admit = continuous or all_free
-            if pending and len(free) and may_admit:
-                admit = np.zeros(self.num_lanes, bool)
-                pr = np.zeros((self.num_lanes, P), np.int32)
-                pl = np.zeros(self.num_lanes, np.int32)
-                rid = np.full(self.num_lanes, -1, np.int32)
-                mx = np.full(self.num_lanes, self.max_new, np.int32)
-                for lane in free:
-                    if not pending:
-                        break
-                    r = pending.popleft()
-                    admit[lane] = True
-                    pl[lane] = len(prompts[r])
-                    pr[lane, :len(prompts[r])] = prompts[r]
-                    rid[lane] = r
-                    mx[lane] = budgets[r]
-                lanes, first = self._jit_admit(
-                    params, lanes, jnp.asarray(admit), jnp.asarray(pr),
-                    jnp.asarray(pl), jnp.asarray(rid), jnp.asarray(mx))
-                first_np = np.asarray(first)
-                for lane in np.flatnonzero(admit):
-                    outputs[int(rid[lane])].append(int(first_np[lane]))
-                # a freshly admitted lane might already be done
-                # (budget 1): retire it before the next decode step
-                lanes = lanes.replace(
-                    active=lanes.active & (lanes.n_new < lanes.max_new))
-            if not bool(np.asarray(lanes.active).any()):
-                continue
-            rid_np = np.asarray(lanes.req_id)
-            lanes, toks, emitted = self._jit_step(params, lanes)
-            steps += 1
-            toks_np, em_np = np.asarray(toks), np.asarray(emitted)
-            for lane in np.flatnonzero(em_np):
-                outputs[int(rid_np[lane])].append(int(toks_np[lane]))
-        wall = time.time() - t0
+        # fenced serve timing (obs/trace.py): the span blocks on the
+        # final lane state before closing, so wall_s covers the full
+        # decode compute — without the fence, in-flight KV updates from
+        # the last steps would leak out of the measurement
+        tr = Tracer()
+        with tr.span("serve") as sp:
+            while pending or bool(np.asarray(lanes.active).any()):
+                active_np = np.asarray(lanes.active)
+                free = np.flatnonzero(~active_np)
+                all_free = not active_np.any()
+                may_admit = continuous or all_free
+                if pending and len(free) and may_admit:
+                    admit = np.zeros(self.num_lanes, bool)
+                    pr = np.zeros((self.num_lanes, P), np.int32)
+                    pl = np.zeros(self.num_lanes, np.int32)
+                    rid = np.full(self.num_lanes, -1, np.int32)
+                    mx = np.full(self.num_lanes, self.max_new, np.int32)
+                    for lane in free:
+                        if not pending:
+                            break
+                        r = pending.popleft()
+                        admit[lane] = True
+                        pl[lane] = len(prompts[r])
+                        pr[lane, :len(prompts[r])] = prompts[r]
+                        rid[lane] = r
+                        mx[lane] = budgets[r]
+                    lanes, first = self._jit_admit(
+                        params, lanes, jnp.asarray(admit), jnp.asarray(pr),
+                        jnp.asarray(pl), jnp.asarray(rid), jnp.asarray(mx))
+                    first_np = np.asarray(first)
+                    for lane in np.flatnonzero(admit):
+                        outputs[int(rid[lane])].append(int(first_np[lane]))
+                    # a freshly admitted lane might already be done
+                    # (budget 1): retire it before the next decode step
+                    lanes = lanes.replace(
+                        active=lanes.active & (lanes.n_new < lanes.max_new))
+                if not bool(np.asarray(lanes.active).any()):
+                    continue
+                rid_np = np.asarray(lanes.req_id)
+                lanes, toks, emitted = self._jit_step(params, lanes)
+                steps += 1
+                toks_np, em_np = np.asarray(toks), np.asarray(emitted)
+                for lane in np.flatnonzero(em_np):
+                    outputs[int(rid_np[lane])].append(int(toks_np[lane]))
+            sp.fence(lanes)
+        wall = tr.totals()["serve"]
         total = sum(len(o) for o in outputs)
         stats = ServeStats(
             requests=n_req, total_tokens=total, decode_steps=steps,
             lane_slots=steps * self.num_lanes, wall_s=wall,
         )
+        if self.registry is not None:
+            publish_serve_stats(self.registry, stats,
+                                schedule=self.schedule)
         return outputs, stats
 
 
