@@ -89,6 +89,21 @@ masquerade as overhead; the summary embeds the instrumented pool's
 (the acceptance bound is 0.97 — instrumentation costs <= 3% of the hot
 loop).
 
+``--multihost`` A/Bs the multi-process topology on loopback
+(``launch/mesh.py::initialize_multihost``, gloo collectives): (a) WEAK
+SCALING — aggregate random-collect FPS of 2 processes (global mesh
+spanning both) vs 1 process at the same per-process shard count, the
+cross-host analogue of ``--mesh``; and (b) DISAGGREGATION —
+``rl/ppo.py::train_disaggregated`` (env shards on one process, the
+learner update on another, params handed back by host broadcast each
+iteration) vs the colocated single-process ``train_pipelined`` at the
+same sizes.  Each rank runs in a fresh subprocess via the hidden
+``--mh-worker`` entry so the set-before-import device-count dance stays
+per-process.  Writes ``BENCH_multihost.json``;
+``--min-multihost-ratio`` / ``--min-disagg-ratio`` gate CI (the
+acceptance bounds — 1.5x weak scaling, 1.0x disaggregation — assume
+>= 2 host cores; scripts/ci.sh derives honest floors from nproc).
+
 Every artifact carries a shared ``meta`` header (git commit, jax
 version + platform, device count, resolved kernel backend, host core
 count) so BENCH_*.json files are comparable across machines/commits.
@@ -125,6 +140,8 @@ def bench_meta() -> dict:
         commit = None
     from repro.kernels.backend import resolve_backend
 
+    from repro.launch.mesh import multihost_info
+
     return {
         "git_commit": commit,
         "jax_version": jax.__version__,
@@ -132,6 +149,10 @@ def bench_meta() -> dict:
         "device_count": jax.device_count(),
         "kernel_backend": resolve_backend("auto"),
         "host_cpu_count": os.cpu_count(),
+        # multi-host provenance (launch/mesh.py): single-process runs
+        # report the backfill defaults {1, 0, None}, so pre-multihost
+        # artifacts and multi-host ones stay comparable field-for-field
+        **multihost_info(),
     }
 
 
@@ -764,6 +785,174 @@ def run_obs(task: str = "TokenCopy-v0", num_envs: int = 64,
     return rows, summary
 
 
+# --------------------------------------------------------------------- #
+# multi-host loopback bench (--multihost): weak scaling + disaggregation
+# --------------------------------------------------------------------- #
+def _mh_worker(cfg: dict) -> int:
+    """Worker entry (--mh-worker): one process of a multihost bench run.
+
+    Joins the loopback ``jax.distributed`` job (or simulates devices
+    solo), runs the requested measurement, prints one JSON line.  Fresh
+    interpreter per worker — the parent never imports jax before
+    spawning these.
+    """
+    from repro.launch import mesh as launch_mesh
+
+    if cfg["procs"] > 1:
+        launch_mesh.initialize_multihost(
+            f"127.0.0.1:{cfg['port']}", num_processes=cfg["procs"],
+            process_id=cfg["pid"], local_device_count=cfg["local_devices"])
+    else:
+        launch_mesh.force_host_device_count(cfg["local_devices"])
+    import jax
+
+    from repro.core.registry import make
+
+    if cfg["kind"] == "collect":
+        from repro.core.xla_loop import build_random_collect_fn
+
+        shards = cfg["procs"] * cfg["local_devices"]
+        n = shards * cfg["envs_per_shard"]
+        pool = make(cfg["task"], num_envs=n, engine="device-sharded",
+                    num_shards=shards, seed=0)
+        collect = build_random_collect_fn(pool, num_steps=cfg["steps"])
+        key = lambda s: pool.put_replicated(  # noqa: E731
+            np.asarray(jax.random.PRNGKey(s)))
+        ps, ts = pool.reset(key(0))
+        ps = pool.device_put(ps)
+        ps, ts, traj, _ = collect(ps, None, ts, key(1))
+        jax.block_until_ready(traj.reward)
+        frames = 0.0
+        t0 = time.time()
+        for i in range(cfg["iters"]):
+            ps, ts, traj, _ = collect(ps, None, ts, key(2 + i))
+            frames += float(traj.step_cost.sum())
+        jax.block_until_ready(traj.reward)
+        out = {"fps": frames / (time.time() - t0), "frames": frames,
+               "shards": shards, "num_envs": n}
+    else:  # train: colocated pipelined vs disaggregated
+        from repro.rl.ppo import (
+            PPOConfig, train_disaggregated, train_pipelined,
+        )
+
+        n = cfg["envs_per_shard"]
+        pool = make(cfg["task"], num_envs=n, engine="device-sharded",
+                    num_shards=1, seed=0)
+        pcfg = PPOConfig(
+            total_steps=n * cfg["num_steps"] * cfg["iters"],
+            num_steps=cfg["num_steps"], minibatches=4, epochs=4)
+        train = train_disaggregated if cfg["procs"] > 1 else train_pipelined
+        _, _, hist = train(pool, pcfg, seed=0, hidden=(64, 64))
+        if len(hist) < 4:
+            raise RuntimeError("need >= 4 iterations to time steady state")
+        # median interval: the jit compiles land in one early interval
+        # (collect in the prologue, update in hist[0]->hist[1]) and would
+        # otherwise dominate a mean at smoke sizes
+        t = [h["time_s"] for h in hist]
+        diffs = sorted(b - a for a, b in zip(t, t[1:]))
+        out = {
+            "s_per_update": diffs[len(diffs) // 2],
+            "mean_return": hist[-1]["mean_return"],
+            "iters": len(hist),
+        }
+    print(json.dumps(dict(out, pid=cfg.get("pid", 0))), flush=True)
+    return 0
+
+
+def _mh_spawn(configs: list[dict], timeout: float = 600.0) -> list[dict]:
+    """Run one worker subprocess per config (concurrently — they are the
+    ranks of one loopback job) and return their JSON results."""
+    import socket
+    import subprocess
+
+    if len(configs) > 1:
+        with socket.socket() as s:
+            s.bind(("127.0.0.1", 0))
+            port = s.getsockname()[1]
+        for i, c in enumerate(configs):
+            c.update(port=port, pid=i, procs=len(configs))
+    else:
+        configs[0].update(pid=0, procs=1)
+    procs = [
+        subprocess.Popen(
+            [sys.executable, os.path.abspath(__file__),
+             "--mh-worker", json.dumps(c)],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+        for c in configs
+    ]
+    results = []
+    try:
+        for p in procs:
+            out, err = p.communicate(timeout=timeout)
+            if p.returncode != 0:
+                raise RuntimeError(f"multihost worker failed:\n{err[-2000:]}")
+            lines = [ln for ln in out.splitlines() if ln.startswith("{")]
+            results.append(json.loads(lines[-1]))
+    finally:
+        for p in procs:
+            p.kill()
+    return results
+
+
+def run_multihost(task: str, envs_per_shard: int, local_devices: int,
+                  steps: int, iters: int, num_steps: int, train_iters: int,
+                  ) -> tuple[list[str], dict]:
+    """The --multihost A/B pair (ROADMAP #1 acceptance):
+
+      * WEAK SCALING — aggregate random-collect FPS of 2 loopback
+        processes (mesh = 2 x local_devices, gloo collectives) vs ONE
+        process at the same per-process shard count.  With >= 2 real
+        cores the fifo hot path has no cross-process rendezvous, so
+        aggregate FPS should approach 2x (the >= 1.5x acceptance
+        floor); on a 1-core container both topologies time-share one
+        core and the honest expectation is parity.
+      * DISAGGREGATION — per-update wall-clock of
+        ``train_disaggregated`` (env process + learner process) vs the
+        colocated single-process ``train_pipelined`` at the same sizes.
+        With >= 2 cores the learner's PPO epochs overlap env stepping
+        across processes (the >= 1.0x acceptance floor); on 1 core the
+        two broadcasts per iteration are pure overhead.
+    """
+    base = {"task": task, "envs_per_shard": envs_per_shard,
+            "local_devices": local_devices, "steps": steps, "iters": iters}
+    solo = _mh_spawn([dict(base, kind="collect")])[0]
+    pair = _mh_spawn([dict(base, kind="collect") for _ in range(2)])
+    scaling = pair[0]["fps"] / max(solo["fps"], 1e-9)
+
+    tbase = {"task": task, "envs_per_shard": envs_per_shard,
+             "local_devices": 1, "num_steps": num_steps,
+             "iters": train_iters}
+    colo = _mh_spawn([dict(tbase, kind="train")])[0]
+    disagg = _mh_spawn([dict(tbase, kind="train") for _ in range(2)])
+    dratio = colo["s_per_update"] / max(disagg[0]["s_per_update"], 1e-9)
+
+    rows = [
+        f"multihost_collect_1proc,{solo['fps']:.0f},"
+        f"aggregate FPS 1 proc x {solo['shards']} shards",
+        f"multihost_collect_2proc,{pair[0]['fps']:.0f},"
+        f"aggregate FPS 2 procs x {local_devices} shards (gloo loopback)",
+        f"multihost_WEAK_SCALING,{scaling:.3f},"
+        "2proc/1proc aggregate FPS at equal per-process shards",
+        f"multihost_train_colocated,{colo['s_per_update'] * 1e3:.1f},"
+        "ms/update train_pipelined (1 proc)",
+        f"multihost_train_disagg,{disagg[0]['s_per_update'] * 1e3:.1f},"
+        "ms/update train_disaggregated (env proc + learner proc)",
+        f"multihost_DISAGG_RATIO,{dratio:.3f},"
+        "colocated/disaggregated wall-clock per update",
+    ]
+    summary = {
+        "task": task,
+        "local_devices_per_process": local_devices,
+        "envs_per_shard": envs_per_shard,
+        "collect": {"solo": solo, "two_process": pair},
+        "weak_scaling": scaling,
+        "train": {"colocated": colo, "disaggregated": disagg},
+        "disagg_ratio": dratio,
+        "host_cpu_count": os.cpu_count(),
+    }
+    return rows, summary
+
+
 def write_json(rows: list[str], extra: dict | None = None,
                path: str | None = None) -> str:
     """Persist the bench rows (and any mode-specific summary) as the
@@ -848,6 +1037,22 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--min-obs-ratio", type=float, default=0.0,
                     help="fail (exit 1) if obs-on/obs-off FPS drops "
                          "below this (CI gate; acceptance bound 0.97)")
+    ap.add_argument("--multihost", action="store_true",
+                    help="multi-process loopback A/B (launch/mesh.py + "
+                         "rl/ppo.py::train_disaggregated): 2-process "
+                         "weak-scaling collect FPS vs 1 process, and "
+                         "disaggregated env/learner per-update wall vs "
+                         "colocated train_pipelined; writes "
+                         "BENCH_multihost.json")
+    ap.add_argument("--min-multihost-ratio", type=float, default=0.0,
+                    help="fail (exit 1) if 2proc/1proc aggregate FPS "
+                         "drops below this (CI gate; acceptance bound "
+                         "1.5 on >= 2 cores)")
+    ap.add_argument("--min-disagg-ratio", type=float, default=0.0,
+                    help="fail (exit 1) if colocated/disaggregated "
+                         "per-update wall ratio drops below this (CI "
+                         "gate; acceptance bound 1.0 on >= 2 cores)")
+    ap.add_argument("--mh-worker", default=None, help=argparse.SUPPRESS)
     ap.add_argument("--task", default="TokenCopy-v0")
     ap.add_argument("--envs-per-shard", type=int, default=16)
     ap.add_argument("--num-envs", type=int, default=64)
@@ -862,6 +1067,9 @@ def main(argv: list[str] | None = None) -> int:
                     help="output path (default: <repo>/BENCH_throughput.json)")
     args = ap.parse_args(argv)
 
+    if args.mh_worker:  # one rank of a --multihost run (fresh process)
+        return _mh_worker(json.loads(args.mh_worker))
+
     rows: list[str] = []
     extra: dict = {}
     if args.mesh or args.schedule or args.resident or args.pipelined:
@@ -872,11 +1080,13 @@ def main(argv: list[str] | None = None) -> int:
                 "--mesh/--schedule/--resident/--pipelined require jax to "
                 "not be imported yet"
             )
-        flags = os.environ.get("XLA_FLAGS", "")
-        if "host_platform_device_count" not in flags:
-            os.environ["XLA_FLAGS"] = (
-                f"{flags} --xla_force_host_platform_device_count={mesh}"
-            ).strip()
+        # shared set-before-import helper (launch/mesh.py); an inherited
+        # count flag (e.g. from a driving harness) wins
+        if "host_platform_device_count" not in os.environ.get("XLA_FLAGS",
+                                                              ""):
+            from repro.launch.mesh import force_host_device_count
+
+            force_host_device_count(mesh, platform=None)
     if args.pipelined:
         if args.smoke:
             args.envs_per_shard, args.steps, args.iters = 16, 16, 4
@@ -908,6 +1118,18 @@ def main(argv: list[str] | None = None) -> int:
         rows = run_mesh(args.mesh, args.task, args.envs_per_shard,
                         args.steps, args.iters)
         extra = {"mode": "mesh", "mesh": args.mesh}
+    elif args.multihost:
+        if args.smoke:
+            mh = dict(envs_per_shard=16, local_devices=2, steps=16,
+                      iters=2, num_steps=16, train_iters=4)
+        else:
+            mh = dict(envs_per_shard=args.envs_per_shard, local_devices=2,
+                      steps=args.steps, iters=max(args.iters, 2),
+                      num_steps=16, train_iters=6)
+        rows, summary = run_multihost(args.task, **mh)
+        extra = {"mode": "multihost", "multihost": summary}
+        if args.json is None:
+            args.json = os.path.join(ROOT, "BENCH_multihost.json")
     elif args.obs:
         if args.smoke:
             # more, shorter iters: best-of keeps the ratio honest on
@@ -1032,6 +1254,23 @@ def main(argv: list[str] | None = None) -> int:
             return 1
         print(f"[bench] obs-on/obs-off ratio {ratio:.3f} >= "
               f"{args.min_obs_ratio} OK")
+    if extra.get("mode") == "multihost":
+        if args.min_multihost_ratio > 0:
+            ratio = extra["multihost"]["weak_scaling"]
+            if ratio < args.min_multihost_ratio:
+                print(f"[bench] FAIL: 2proc/1proc weak-scaling FPS ratio "
+                      f"{ratio:.3f} < {args.min_multihost_ratio}")
+                return 1
+            print(f"[bench] 2proc/1proc weak-scaling FPS ratio "
+                  f"{ratio:.3f} >= {args.min_multihost_ratio} OK")
+        if args.min_disagg_ratio > 0:
+            ratio = extra["multihost"]["disagg_ratio"]
+            if ratio < args.min_disagg_ratio:
+                print(f"[bench] FAIL: colocated/disaggregated per-update "
+                      f"ratio {ratio:.3f} < {args.min_disagg_ratio}")
+                return 1
+            print(f"[bench] colocated/disaggregated per-update ratio "
+                  f"{ratio:.3f} >= {args.min_disagg_ratio} OK")
     if extra.get("mode") == "transforms" and args.min_transform_ratio > 0:
         ratio = extra["transforms"]["ratio"]
         if ratio < args.min_transform_ratio:

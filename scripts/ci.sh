@@ -8,37 +8,43 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
+# gate <banner> <bench args...> — one bench_throughput invocation per
+# gated mode; every floor rides on the args so the contract is visible
+# in one place at each call site.
+gate() {
+    echo "== $1 =="
+    shift
+    python benchmarks/bench_throughput.py "$@"
+}
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
 if [ -z "${CI_SKIP_BENCH:-}" ]; then
-    echo "== sharded-engine smoke (mesh=4, simulated host devices) =="
-    python benchmarks/bench_throughput.py --mesh 4 --smoke
+    gate "sharded-engine smoke (mesh=4, simulated host devices)" \
+        --mesh 4 --smoke
 
-    echo "== batched-vs-vmap hot-path A/B smoke (Ant-v3) =="
     # regression gate for the batched-native env layer: the fused path
     # must not fall behind the forced vmap-lifting baseline (0.7 floor
     # absorbs 2-core CI timer noise; real regressions are step changes).
     # Writes BENCH_throughput.json with the A/B numbers.
-    python benchmarks/bench_throughput.py --ab --smoke --min-ab-ratio 0.7
+    gate "batched-vs-vmap hot-path A/B smoke (Ant-v3)" \
+        --ab --smoke --min-ab-ratio 0.7
 
-    echo "== scheduling-policy A/B smoke (fifo vs sjf/hierarchical, mesh=4) =="
     # the cost-aware schedulers must keep beating fifo on the long-tail
     # skew workload (acceptance floor 1.15x; typical ≥ 2x — the 1.15
     # margin absorbs CI timer noise).  Writes BENCH_schedule.json.
-    python benchmarks/bench_throughput.py --schedule --smoke \
-        --min-schedule-ratio 1.15
+    gate "scheduling-policy A/B smoke (fifo vs sjf/hierarchical, mesh=4)" \
+        --schedule --smoke --min-schedule-ratio 1.15
 
-    echo "== device-resident vs host-driven collect A/B (mesh 1 and 4) =="
     # the unified mesh engine's acceptance gate: the donated lax.scan
     # collect (what rl/ppo.train_device runs — PoolState never leaves
     # the mesh) must keep beating the per-step host-driven recv loop at
     # mesh=4 (typical ≥ 5x on 2-core CI; the 1.2 floor is the
     # regression gate).  Writes BENCH_resident.json.
-    python benchmarks/bench_throughput.py --resident --smoke \
-        --min-resident-ratio 1.2
+    gate "device-resident vs host-driven collect A/B (mesh 1 and 4)" \
+        --resident --smoke --min-resident-ratio 1.2
 
-    echo "== pipelined vs fused-serial collect/train A/B (mesh 1 and 4) =="
     # the pipelined-driver gate: collect and update as two concurrently
     # dispatched programs (rollout one policy step stale, V-trace
     # corrected) must beat the fused-serial train_device program's
@@ -47,8 +53,8 @@ if [ -z "${CI_SKIP_BENCH:-}" ]; then
     # shard (typical ~2x on 1-core CI; 1.5 is the acceptance floor).
     # Writes BENCH_pipelined.json (incl. both sides' mean_return for
     # the reward-parity check).
-    python benchmarks/bench_throughput.py --pipelined --smoke \
-        --min-pipelined-ratio 1.5
+    gate "pipelined vs fused-serial collect/train A/B (mesh 1 and 4)" \
+        --pipelined --smoke --min-pipelined-ratio 1.5
 
     echo "== transform-pipeline conformance (device/sharded mesh 1,2,4/thread) =="
     # the in-engine pipeline's engine-conformance + golden-pin tests
@@ -56,13 +62,12 @@ if [ -z "${CI_SKIP_BENCH:-}" ]; then
     # invocation still exercises them)
     python -m pytest -q tests/test_transforms.py
 
-    echo "== in-engine vs python-wrapper preprocessing A/B (PongStack-v5) =="
     # EnvPool §3.4: preprocessing inside the engine must not lose to the
     # gym-style wrapper placement (typical 3-4x in-engine at the smoke's
     # N=64 on this 2-core CI; the 1.0 floor is the regression gate).
     # Writes BENCH_transforms.json.
-    python benchmarks/bench_throughput.py --transforms --smoke \
-        --min-transform-ratio 1.0
+    gate "in-engine vs python-wrapper preprocessing A/B (PongStack-v5)" \
+        --transforms --smoke --min-transform-ratio 1.0
 
     echo "== image-kernel family conformance (Pallas gray/resize/crop/render) =="
     # backend tri-identity (pallas-interpret == reference == jnp
@@ -71,14 +76,13 @@ if [ -z "${CI_SKIP_BENCH:-}" ]; then
     # bench-only invocations)
     python -m pytest -q tests/test_image_kernels.py
 
-    echo "== in-engine vs python-wrapper IMAGE pipeline A/B (PongClassic-v5) =="
     # the on-device image pipeline's acceptance gate: RGB render +
     # grayscale/resize fused into the jitted recv must beat shipping
     # raw 210x160x3 screens to a host-side numpy wrapper by >= 1.5x at
     # the smoke's N=64 (typical ~1.8x on this CI).  Writes
     # BENCH_image.json.
-    python benchmarks/bench_throughput.py --image --smoke \
-        --min-image-ratio 1.5
+    gate "in-engine vs python-wrapper IMAGE pipeline A/B (PongClassic-v5)" \
+        --image --smoke --min-image-ratio 1.5
 
     echo "== LLM-policy decode-path parity (kernel/carriage/engine) =="
     # ragged-length kernel parity, bitwise KV-cache carriage under
@@ -87,29 +91,54 @@ if [ -z "${CI_SKIP_BENCH:-}" ]; then
     # standalone for bench-only invocations)
     python -m pytest -q tests/test_decode_policy.py
 
-    echo "== KV-cached decode + continuous-batching A/B (TokenCopy/TokenRagged) =="
     # the decode-path acceptance gates: the cached one-token-per-recv
     # decode_step must beat the full-recompute forward >= 3x per token
     # at N=32 (typical larger — the baseline re-pays the whole prefix
     # every token), and continuous batching must beat run-to-completion
     # static batches >= 1.2x useful tokens/s on the ragged-length mix
     # (typical ~2x at 75% short episodes).  Writes BENCH_decode.json.
-    python benchmarks/bench_throughput.py --decode --smoke \
-        --min-decode-cached-ratio 3.0 --min-decode-cb-ratio 1.2
+    gate "KV-cached decode + continuous-batching A/B (TokenCopy/TokenRagged)" \
+        --decode --smoke --min-decode-cached-ratio 3.0 \
+        --min-decode-cb-ratio 1.2
 
     echo "== telemetry conformance (stats() on all six engines, mesh 1,2,4) =="
     # the obs/ subsystem's engine-conformance + mesh-invariance tests
     # (also tier-1 above; standalone for bench-only invocations)
     python -m pytest -q tests/test_obs.py
 
-    echo "== telemetry-overhead A/B gate (obs on vs off, device sync) =="
     # the instrumentation must stay in-graph integer noise: obs-on FPS
     # >= 0.97x obs-off on the random-collect hot loop (acceptance bound
     # is <= 3% overhead; typical parity on this CI — the counters are a
     # handful of int32 adds against a full env step).  Writes
     # BENCH_obs.json with both sides, the stats() snapshot, and the
     # metrics-registry export.
-    python benchmarks/bench_throughput.py --obs --smoke \
-        --min-obs-ratio 0.97
+    gate "telemetry-overhead A/B gate (obs on vs off, device sync)" \
+        --obs --smoke --min-obs-ratio 0.97
+
+    echo "== multi-host loopback smoke (2 processes, gloo) =="
+    # process topology, bitwise 1-proc-vs-2-proc stream/stats
+    # invariance, and the compiled-HLO collective audit (fifo hot path
+    # = zero collectives; hierarchical+NormalizeObs = only the
+    # fixed-size cost all_gather + moment psums) — also tier-1 above;
+    # standalone for bench-only invocations
+    python -m pytest -q tests/test_multihost.py
+
+    # the multi-host acceptance gates.  The CONTRACT floors — 2-proc
+    # aggregate FPS >= 1.5x 1-proc weak scaling, disaggregated
+    # per-update >= 1.0x colocated — need at least two real cores: on a
+    # 1-core box both loopback ranks time-share one core, so the 2-proc
+    # sides measure multiplexing + broadcast overhead, not scaling.
+    # There the floors drop to regression tripwires (measured ~0.29
+    # weak / 0.18-0.31 disagg across runs on 1-core CI; an
+    # env-data-sized collective sneaking onto the hot path would
+    # crater them well below these).  Writes BENCH_multihost.json.
+    if [ "$(nproc)" -ge 2 ]; then
+        MH_FLOOR=1.5 DISAGG_FLOOR=1.0
+    else
+        MH_FLOOR=0.15 DISAGG_FLOOR=0.10
+    fi
+    gate "multi-host weak-scaling + disaggregation A/B (loopback)" \
+        --multihost --smoke --min-multihost-ratio "$MH_FLOOR" \
+        --min-disagg-ratio "$DISAGG_FLOOR"
 fi
 echo "CI OK"

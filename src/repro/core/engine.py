@@ -62,7 +62,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.scheduler import (
     HAS_ACTION,
@@ -104,7 +104,12 @@ def _traced(*trees: Any) -> bool:
 
 def make_env_mesh(num_shards: int | None = None, axis_name: str = ENV_AXIS
                   ) -> Mesh:
-    """1-D mesh over the first ``num_shards`` devices (default: all)."""
+    """1-D mesh over the first ``num_shards`` devices (default: all).
+
+    ``jax.devices()`` is the GLOBAL device list, so after
+    ``launch.mesh.initialize_multihost()`` the returned mesh spans
+    processes and a ``MeshEnvPool`` built on it runs the same per-shard
+    bodies across hosts (multi-host contract: ``core/protocol.py``)."""
     devices = jax.devices()
     d = num_shards if num_shards is not None else len(devices)
     if d < 1 or d > len(devices):
@@ -680,7 +685,15 @@ class MeshEnvPool:
             raise RuntimeError(
                 "telemetry disabled: pool was constructed with obs=False"
             )
-        return snapshot_device(ps.telemetry, ps.tick)
+        tel, tick = ps.telemetry, ps.tick
+        if self.is_multiprocess:
+            # multi-host: counter leaves live on remote shards, so gather
+            # a replicated copy first.  Fixed-size integer leaves on an
+            # explicit stats() call only — never the hot path — and the
+            # cross-shard sums stay integer adds, so the snapshot remains
+            # bitwise identical to the single-process one.
+            tel, tick = self.replicate((tel, tick))
+        return snapshot_device(tel, tick)
 
     # ------------------------------------------------------------------ #
     # paper Appendix E: jittable handle API
@@ -711,6 +724,45 @@ class MeshEnvPool:
     def device_put(self, ps: PoolState) -> PoolState:
         """Explicitly lay the state out across the mesh."""
         return jax.tree.map(jax.device_put, ps, self.state_shardings(ps))
+
+    # ------------------------------------------------------------------ #
+    # multi-host plumbing (contract: core/protocol.py)
+    # ------------------------------------------------------------------ #
+    @functools.cached_property
+    def is_multiprocess(self) -> bool:
+        """True when the env mesh spans OS processes (multi-host run)."""
+        pid = jax.process_index()
+        return any(d.process_index != pid for d in self.mesh.devices.flat)
+
+    @functools.cached_property
+    def _jit_replicate(self):
+        return jax.jit(lambda t: t,
+                       out_shardings=NamedSharding(self.mesh, P()))
+
+    def replicate(self, tree: Any) -> Any:
+        """All-gather a mesh-partitioned pytree so every device — and so
+        every process — holds a full copy, making ``np.asarray`` legal on
+        the result in multi-process runs (host reads of remote shards are
+        otherwise non-addressable).  Driver/``stats()`` plumbing only:
+        this IS an env-data-sized collective, so it must never appear in
+        the engine's send/recv/step programs (the compiled-HLO audit in
+        tests/test_multihost.py holds the hot path to that)."""
+        return self._jit_replicate(tree)
+
+    def put_batch(self, tree: Any) -> Any:
+        """Explicitly place an ``(M, ...)`` shard-major host batch onto
+        the mesh, partitioned on dim 0.  Required in multi-process
+        drivers — raw host arrays cannot implicitly cross to
+        non-addressable devices — and a no-op-cost explicit placement on
+        one process (every process passes the same host values)."""
+        sh = NamedSharding(self.mesh, P(self.axis_name))
+        return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+    def put_replicated(self, tree: Any) -> Any:
+        """As :meth:`put_batch` for unpartitioned values (e.g. the init
+        key): replicate a host value across the mesh explicitly."""
+        sh = NamedSharding(self.mesh, P())
+        return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
 
     # ------------------------------------------------------------------ #
     # transform-state checkpointing (ROADMAP transforms open item)

@@ -15,9 +15,12 @@ envs in the paper's Table 2 comparison.
 
 from __future__ import annotations
 
+import atexit
+import functools
 import threading
 import time
 import traceback
+import weakref
 from typing import Any, Callable
 
 import numpy as np
@@ -30,6 +33,22 @@ from repro.obs.telemetry import HostTelemetry
 
 _RESET = object()  # sentinel action: reset the env
 _STOP = object()   # sentinel work item: worker shutdown
+
+
+def _close_at_exit(pool_ref: weakref.ref) -> None:
+    """atexit hook: close a still-live pool BEFORE interpreter teardown.
+
+    Daemon workers don't keep the process alive, but a worker still
+    inside a jitted env step when the runtime starts tearing down
+    aborts the whole process (XLA's C++ threads hit std::terminate).
+    Joining the workers while Python is still fully alive avoids that;
+    ``__del__`` alone can't guarantee it (shutdown-order dependent)."""
+    pool = pool_ref()
+    if pool is not None:
+        try:
+            pool.close()
+        except Exception:
+            pass
 
 
 class HostEnv:
@@ -187,13 +206,28 @@ class ThreadEnvPool:
             threading.Thread(target=self._worker, daemon=True, name=f"envpool-{i}")
             for i in range(self.num_threads)
         ]
+        # a dropped (never-closed) pool must neither hang nor abort the
+        # interpreter at exit — see _close_at_exit.  weakref so the hook
+        # doesn't keep the pool alive; partial so unregister in close()
+        # removes exactly this pool's hook.
+        self._atexit_cb = functools.partial(
+            _close_at_exit, weakref.ref(self))
+        atexit.register(self._atexit_cb)
         for t in self._threads:
             t.start()
 
     # ------------------------------------------------------------------ #
     def _worker(self) -> None:
         while True:
-            item = self._actions.get()
+            # bounded waits + a _running re-check on every block point:
+            # a closed pool must never strand a worker in an unbounded
+            # queue wait (the semaphores have no close() to wake them)
+            try:
+                item = self._actions.get(timeout=0.2)
+            except TimeoutError:
+                if not self._running:
+                    return
+                continue
             if item is _STOP:
                 return
             env_id, action = item
@@ -213,7 +247,16 @@ class ThreadEnvPool:
                     if self._error is None:
                         self._error = (env_id, traceback.format_exc())
                 continue
-            blk, slot = self._states.acquire_slot()
+            while True:
+                try:
+                    blk, slot = self._states.acquire_slot(timeout=0.2)
+                    break
+                except TimeoutError:
+                    # result buffer saturated and nobody is recv()ing —
+                    # the classic dropped-pool state.  Exit on close()
+                    # instead of wedging forever under backpressure.
+                    if not self._running:
+                        return
             blk.write(
                 slot,
                 {
@@ -339,7 +382,16 @@ class ThreadEnvPool:
             if not self._running:
                 return
             self._running = False
-        self._actions.put_batch([_STOP] * self.num_threads)
+        atexit.unregister(self._atexit_cb)
+        # sentinels wake idle workers immediately; workers wedged on
+        # result-buffer backpressure exit via their _running poll, so a
+        # FULL action ring (close() with num_envs actions still queued)
+        # must not turn this into an unbounded block — drop the
+        # sentinels on timeout rather than hang the closer
+        try:
+            self._actions.put_batch([_STOP] * self.num_threads, timeout=1.0)
+        except TimeoutError:
+            pass
         for t in self._threads:
             t.join(timeout=5.0)
 

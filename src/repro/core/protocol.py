@@ -111,6 +111,41 @@ served streams (and goldens) are bitwise-unchanged with it on, and
 ``obs=False`` at construction strips every counter leaf, recovering
 the exact uninstrumented program (``stats()`` then raises
 ``RuntimeError``).
+
+Multi-host contract (``launch/mesh.py`` + ``distributed/sharding.py``):
+after ``initialize_multihost(coordinator, num_processes, process_id)``
+the mesh engine's 1-D device mesh may SPAN processes —
+``make_env_mesh`` builds it over the global ``jax.devices()`` and the
+engine bodies are unchanged (the same ``shard_map`` programs, now
+compiled SPMD across hosts).  What lives where:
+
+* **env state** — every ``PoolState`` leaf stays sharded over the
+  global mesh (each process holds only its shards' rows); it never
+  crosses hosts on the hot path.
+* **hot-path collectives** — exactly two fixed-size families are
+  permitted in a compiled step/recv, independent of env count and
+  observation size: the scheduler's ``(D, C)`` per-shard cost/priority
+  ``all_gather`` and the ``NormalizeObs`` moment ``psum``.  Nothing
+  env-data-sized ever moves between hosts (audited from compiled HLO
+  in tests/test_multihost.py).
+* **host reads** — ``stats(ps)`` and any host materialization of
+  sharded leaves go through ``replicate()`` (a jitted all-gather to a
+  fully-replicated layout) so every process can ``np.asarray`` the
+  result; these are explicit, off-hot-path calls, and the integer
+  partial-sum telemetry keeps snapshots bitwise process-count-
+  invariant (the same rollout on a 1-process mesh=D and a multi-
+  process mesh=D yields identical streams AND identical ``stats()``).
+* **disaggregation** (``rl/ppo.py::train_disaggregated``) — env shards
+  live on the env processes' mesh, the learner update runs on its own
+  process with per-role local jits; rollouts and refreshed params are
+  handed off by host-level broadcast each iteration (small, fixed
+  payloads), params re-enter the env mesh via
+  ``distributed/sharding.py::policy_shardings`` placement, and the
+  one-iteration staleness is the same policy lag ``train_pipelined``'s
+  V-trace correction already makes principled.
+* **checkpoint/elastic restore** — unaffected: transform state is
+  stored as global statistics and re-broadcast to the restoring pool's
+  shard count, whatever its process topology.
 """
 
 from __future__ import annotations

@@ -358,6 +358,48 @@ def policy_shardings(
     return jax.tree.map(one, params)
 
 
+# --------------------------------------------------------------------- #
+# multi-host disaggregation (rl/ppo.py::train_disaggregated)
+# --------------------------------------------------------------------- #
+def disaggregated_env_mesh(
+    num_shards: int | None = None,
+    axis_name: str = "env",
+    learner_process: int | None = None,
+) -> Mesh:
+    """1-D env mesh over the GLOBAL devices of every process EXCEPT the
+    learner's — the actor/learner split (SRL, Spreeze; ROADMAP #1).
+
+    The learner process defaults to the LAST process, so the env mesh is
+    a prefix of ``jax.devices()`` and coincides with what
+    ``make_env_mesh(num_shards)`` would build — but this constructor
+    asserts the exclusion instead of relying on device-id ordering.
+    """
+    if learner_process is None:
+        learner_process = jax.process_count() - 1
+    devs = [d for d in jax.devices() if d.process_index != learner_process]
+    if not devs:
+        raise ValueError("no env devices left outside the learner process")
+    d = num_shards if num_shards is not None else len(devs)
+    if d < 1 or d > len(devs):
+        raise ValueError(f"num_shards={d} not in [1, {len(devs)}] env devices")
+    return Mesh(np.array(devs[:d]), (axis_name,))
+
+
+def host_broadcast(tree: Any, source_process: int) -> Any:
+    """Ship a host-side pytree from ``source_process`` to every process
+    (one replicated psum over the global device set — the only portable
+    cross-device-set transport: ``device_put`` onto another process's
+    devices is not).  Non-source processes pass placeholders of the same
+    structure/shape; everyone returns numpy.  This is the disaggregated
+    trainer's rollout/params hand-off — driver-level, never inside an
+    engine program."""
+    from jax.experimental import multihost_utils
+
+    out = multihost_utils.broadcast_one_to_all(
+        tree, is_source=jax.process_index() == source_process)
+    return jax.tree.map(np.asarray, out)
+
+
 def bytes_per_device(tree_shape: Any, shardings: Any, mesh: Mesh) -> int:
     """Estimate per-device bytes of a sharded pytree (for reports)."""
     total = 0

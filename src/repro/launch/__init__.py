@@ -2,7 +2,10 @@
 
 
 def __getattr__(name):
-    if name in ("make_production_mesh", "make_debug_mesh"):
+    if name in (
+        "make_production_mesh", "make_debug_mesh", "make_env_mesh",
+        "force_host_device_count", "initialize_multihost", "multihost_info",
+    ):
         from repro.launch import mesh
 
         return getattr(mesh, name)

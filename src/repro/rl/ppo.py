@@ -467,6 +467,170 @@ def train_pipelined(
 
 
 # --------------------------------------------------------------------- #
+# multi-host disaggregated driver (env processes + a learner process)
+# --------------------------------------------------------------------- #
+def train_disaggregated(
+    pool: Any,                     # MeshEnvPool on an env-process-only mesh
+    cfg: PPOConfig,
+    seed: int = 0,
+    log_fn: Callable[[dict], None] | None = None,
+    hidden: tuple[int, ...] = (256, 128, 64),
+    learner_process: int | None = None,
+):
+    """Actor/learner disaggregation across processes (ROADMAP #1: the
+    SRL/Spreeze split).  Multi-controller SPMD: EVERY process of the
+    ``jax.distributed`` job calls this with the same arguments; the role
+    decides which programs a process actually executes.
+
+      * env processes (all but one) drive ``pool`` — whose mesh must
+        live entirely on THEIR devices
+        (``distributed.sharding.disaggregated_env_mesh``) — running the
+        same donated pipelined collect as ``train_pipelined``;
+      * the learner process runs the V-trace PPO update on its own
+        hardware, a whole process removed from env stepping;
+      * the roles meet only at driver-level ``host_broadcast`` points:
+        rollout t crosses env->learner while the env mesh is already
+        collecting t+1, and the updated params cross back, placed onto
+        the env mesh via the ``policy_shardings`` layout.  The rollout
+        the learner consumes is therefore exactly one policy step stale
+        — the same lag schedule as ``train_pipelined``, absorbed by the
+        same V-trace correction.  (``device_put`` onto another process's
+        devices is not portable, so the hand-off ships host-side through
+        one replicated broadcast per direction — fixed cost per
+        iteration, never inside an engine program.)
+
+    Returns ``(state, net, history)``.  ``history`` is identical on
+    every process (metrics ride the params broadcast); ``state`` is
+    authoritative on the learner — env processes return the final
+    broadcast params over a never-advanced local opt state.
+    """
+    from repro.core.xla_loop import build_pipelined_collect_fn
+    from repro.distributed.sharding import host_broadcast, policy_shardings
+
+    if jax.process_count() < 2:
+        raise ValueError("train_disaggregated needs >= 2 processes — join "
+                         "them with launch.mesh.initialize_multihost()")
+    if not is_functional(pool):
+        raise ValueError("train_disaggregated needs a functional (device-"
+                         "family) engine")
+    if learner_process is None:
+        learner_process = jax.process_count() - 1
+    is_learner = jax.process_index() == learner_process
+    mesh = pool.mesh
+    if any(d.process_index == learner_process for d in mesh.devices.flat):
+        raise ValueError("pool mesh overlaps the learner process; build it "
+                         "with distributed.sharding.disaggregated_env_mesh")
+    # the env process that sources the rollout broadcast: wherever the
+    # mesh's first device lives (rollouts are replicated env-side first)
+    env_src = int(mesh.devices.flat[0].process_index)
+
+    net = ActorCritic(pool.spec, hidden=hidden)
+    key = jax.random.PRNGKey(seed)   # same seed everywhere -> same stream
+    key, k_init, k_pool = jax.random.split(key, 3)
+    params_host = jax.tree.map(np.asarray, net.init(k_init))
+    # one explicit sync so every process provably starts from the
+    # learner's params (init is deterministic, but the contract is
+    # "params come from the learner")
+    params_host = host_broadcast(params_host, learner_process)
+
+    M = pool.batch_size
+    steps_per_iter = cfg.num_steps * M
+    total_updates = max(
+        1, cfg.total_steps // steps_per_iter
+    ) * cfg.epochs * cfg.minibatches
+    opt, vupdate = make_vtrace_ppo_update(net, cfg, total_updates)
+
+    def policy(p, obs, k):
+        a, logp, _, _ = net.sample(p, obs, k)
+        return a, logp
+
+    collect = build_pipelined_collect_fn(pool, policy, cfg.num_steps)
+
+    def update_step(state, traj, ku):
+        state, metrics = vupdate(state, traj, ku)
+        episodes, ep_sum = _episode_metrics(traj["dones"], traj["ep_ret"])
+        return state, dict(metrics, episodes=episodes, ep_sum=ep_sum)
+
+    update = jax.jit(update_step, donate_argnums=(0,))
+
+    # every process derives the rollout/metrics STRUCTURE abstractly:
+    # the learner needs same-shape placeholders for the broadcast it
+    # doesn't source (and vice versa), and eval_shape never touches a
+    # device, so tracing the env-mesh collect is legal on the learner
+    state = PPOState(params=jax.tree.map(jnp.asarray, params_host),
+                     opt=opt.init(jax.tree.map(jnp.asarray, params_host)),
+                     step=jnp.int32(0))
+    k_abs = jax.random.PRNGKey(0)
+    abs_ps, abs_ts = jax.eval_shape(pool.reset, k_abs)
+    _, _, abs_traj = jax.eval_shape(collect, abs_ps, state.params, abs_ts,
+                                    k_abs)
+    traj_zeros = jax.tree.map(lambda s: np.zeros(s.shape, s.dtype), abs_traj)
+    _, abs_metrics = jax.eval_shape(update_step, state, abs_traj, k_abs)
+    metric_keys = sorted(abs_metrics)
+
+    pshard = policy_shardings(mesh, params_host)
+
+    def place_params(p_host):
+        """learner->env push: the policy_shardings placement (replicated
+        over the env mesh for small nets).  Env processes only — the
+        learner's devices are outside this mesh by construction."""
+        return jax.tree.map(jax.device_put, p_host, pshard)
+
+    def fetch(tree):
+        """Env-side host read: replicate over the env mesh, then numpy."""
+        return jax.tree.map(np.asarray, pool.replicate(tree))
+
+    history: list[dict] = []
+    traj_host = traj_zeros
+    params_dev = None
+    key, kc0 = jax.random.split(key)   # split on ALL processes: one stream
+    if not is_learner:
+        ps, ts = pool.reset(pool.put_replicated(np.asarray(k_pool)))
+        ps = pool.device_put(ps)
+        params_dev = place_params(params_host)
+        # prologue: rollout 0 behind the init params
+        ps, ts, traj_prev = collect(ps, params_dev,
+                                    ts, pool.put_replicated(np.asarray(kc0)))
+        traj_host = fetch(traj_prev)
+
+    n_iters = max(1, cfg.total_steps // steps_per_iter)
+    t0 = time.time()
+    for it in range(n_iters):
+        key, kc, ku = jax.random.split(key, 3)
+        # rollout t crosses env->learner (every process participates)
+        traj_rx = host_broadcast(traj_host, env_src)
+        if is_learner:
+            state, metrics = update(state, traj_rx, ku)
+            params_host = jax.tree.map(np.asarray, state.params)
+            mvec = np.array([float(metrics[k]) for k in metric_keys])
+        else:
+            # dispatch collect(t+1) behind the CURRENT params NOW — it
+            # overlaps with the learner's update on rollout t
+            ps, ts, traj_next = collect(ps, params_dev, ts,
+                                        pool.put_replicated(np.asarray(kc)))
+            mvec = np.zeros((len(metric_keys),), np.float64)
+        # updated params (+ metrics) cross back learner->envs
+        params_host, mvec = host_broadcast((params_host, mvec),
+                                           learner_process)
+        if not is_learner:
+            params_dev = place_params(params_host)
+            traj_host = fetch(traj_next)
+        metrics = dict(zip(metric_keys, mvec.tolist()))
+        episodes = int(metrics.pop("episodes"))
+        ep_sum = float(metrics.pop("ep_sum"))
+        rec = {
+            "iter": it,
+            "env_steps": (it + 1) * steps_per_iter,
+            "time_s": time.time() - t0,
+            **{k: float(v) for k, v in metrics.items()},
+        }
+        _record(history, rec, episodes, ep_sum, log_fn)
+    if not is_learner:
+        state = state.replace(params=jax.tree.map(jnp.asarray, params_host))
+    return state, net, history
+
+
+# --------------------------------------------------------------------- #
 # host-engine driver (the paper's Fig. 4 profile path)
 # --------------------------------------------------------------------- #
 def train_host(

@@ -1,0 +1,170 @@
+"""Subprocess helper for tests/test_multihost.py.
+
+Runs the SAME scripted sync rollout (TokenCopy, mesh=2) in two process
+topologies and prints one JSON object per process, so the parent can
+assert the multi-host contract (core/protocol.py):
+
+  * ``solo`` — one process, two simulated host devices (the classic
+    ``_sharded_check`` setup);
+  * ``rank <pid> <port>`` — one of TWO loopback processes joined via
+    ``launch.mesh.initialize_multihost``, one simulated device each, so
+    the SAME global mesh=2 now spans processes.
+
+The parent asserts the stream sha + ``stats()`` snapshot are bitwise
+identical across {solo, rank0, rank1} — env trajectories, block
+emission order and telemetry must not depend on WHERE the shards live.
+
+Both modes also emit a compiled-HLO collective audit of the hot path:
+
+  * the fifo/no-transform pool's ``step`` program must contain ZERO
+    collectives (shards never talk);
+  * the hierarchical + NormalizeObs pool's ``step`` program may contain
+    ONLY the two permitted fixed-size collectives — the scheduler's
+    (D, C) cost all_gather and the moment psum — every collective's
+    payload must stay far below one served env-data block.
+
+Usage:
+  python tests/_multihost_check.py solo
+  python tests/_multihost_check.py rank <process_id> <port>
+"""
+
+import hashlib
+import json
+import re
+import sys
+
+from repro.launch.mesh import force_host_device_count, initialize_multihost
+
+MODE = sys.argv[1] if len(sys.argv) > 1 else "solo"
+if MODE == "solo":
+    force_host_device_count(2)
+elif MODE == "rank":
+    initialize_multihost(f"127.0.0.1:{sys.argv[3]}", num_processes=2,
+                         process_id=int(sys.argv[2]), local_device_count=1)
+else:  # pragma: no cover
+    raise SystemExit(f"unknown mode {MODE!r}")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.registry import make  # noqa: E402
+from repro.launch.mesh import multihost_info  # noqa: E402
+from repro.obs.telemetry import stats_to_jsonable  # noqa: E402
+
+TASK = "TokenCopy-v0"
+N = 8
+STEPS = 6
+SEED = 0
+
+# ---------------------------------------------------------------------- #
+# compiled-HLO collective audit
+# ---------------------------------------------------------------------- #
+_COLL = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE = re.compile(
+    r"\b(f64|f32|bf16|f16|pred|s64|s32|s16|s8|u64|u32|u16|u8)\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "pred": 1, "s8": 1,
+          "u8": 1}
+
+
+def collective_ops(compiled_text: str) -> list:
+    """Every collective op in an optimized-HLO dump with its largest
+    operand/result payload in bytes (``-done`` halves of async pairs are
+    skipped so ops aren't double-counted)."""
+    ops = []
+    for ln in compiled_text.splitlines():
+        if "-done" in ln:
+            continue
+        m = _COLL.search(ln)
+        if not m:
+            continue
+        sizes = [
+            _BYTES[d] * int(np.prod([int(x) for x in dims.split(",") if x]
+                                    or [1]))
+            for d, dims in _SHAPE.findall(ln)
+        ]
+        ops.append({"op": m.group(1), "bytes": max(sizes) if sizes else 0})
+    return ops
+
+
+def audit_step(pool, ps, a, eid) -> list:
+    txt = jax.jit(pool.step).lower(ps, a, eid).compile().as_text()
+    return collective_ops(txt)
+
+
+# ---------------------------------------------------------------------- #
+# the scripted rollout (identical code path in both topologies)
+# ---------------------------------------------------------------------- #
+def fetchers(pool):
+    """Host reads + action placement that work in BOTH topologies: fetch
+    replicates (all-gather to every process — test plumbing, not engine
+    hot path), put plants identical host values explicitly."""
+    def fetch(tree):
+        return jax.tree.map(np.asarray, pool.replicate(tree))
+
+    return fetch, pool.put_batch
+
+
+def scripted_rollout() -> dict:
+    pool = make(TASK, num_envs=N, engine="device-sharded", num_shards=2,
+                seed=SEED)
+    fetch, put = fetchers(pool)
+    hi = int(pool.spec.act_spec.maximum or 1)
+    adt = np.dtype(pool.spec.act_spec.dtype)
+    key = pool.put_replicated(np.asarray(jax.random.PRNGKey(SEED)))
+    ps, ts = pool.reset(key)
+    step = jax.jit(pool.step)
+    sha = hashlib.sha256()
+    ids_all, done_all, rew_all = [], [], []
+    a = eid = None
+    for t in range(STEPS):
+        obs, rew, done, ids = fetch((ts.obs, ts.reward, ts.done, ts.env_id))
+        for arr in (obs, rew, done, ids):
+            sha.update(np.ascontiguousarray(arr).tobytes())
+        ids_all.append(ids.tolist())
+        done_all.append(done.astype(int).tolist())
+        rew_all.append(rew.astype(np.float64).tolist())
+        a, eid = put((((ids * 7 + t) % (hi + 1)).astype(adt), ids))
+        ps, ts = step(ps, a, eid)
+    return {
+        "stream_sha": sha.hexdigest(),
+        "ids": ids_all,
+        "done": done_all,
+        "rew": rew_all,
+        "stats": stats_to_jsonable(pool.stats(ps)),
+        "fifo_collectives": audit_step(pool, ps, a, eid),
+    }
+
+
+def hot_path_audit() -> dict:
+    """Hierarchical scheduler + NormalizeObs at a size where one served
+    block (M/D envs x 29 floats) dwarfs the permitted collectives."""
+    pool = make("AntNorm-v3", num_envs=128, batch_size=64,
+                engine="device-sharded", num_shards=2,
+                schedule="hierarchical", seed=SEED)
+    fetch, put = fetchers(pool)
+    key = pool.put_replicated(np.asarray(jax.random.PRNGKey(SEED)))
+    ps, ts = pool.reset(key)
+    ids = fetch(ts.env_id)
+    act_shape = (len(ids),) + tuple(pool.spec.act_spec.shape)
+    a, eid = put((np.zeros(act_shape, np.float32), ids))
+    m_local = pool.batch_size // pool.num_shards
+    obs_dim = int(np.prod(pool.spec.obs_spec.shape))
+    return {
+        "ops": audit_step(pool, ps, a, eid),
+        "block_bytes": m_local * obs_dim * 4,
+    }
+
+
+def main() -> dict:
+    return {
+        "meta": dict(multihost_info(), devices=len(jax.devices())),
+        "rollout": scripted_rollout(),
+        "audit": hot_path_audit(),
+    }
+
+
+if __name__ == "__main__":
+    print(json.dumps(main()))

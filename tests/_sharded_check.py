@@ -9,15 +9,12 @@ Usage: python tests/_sharded_check.py [D]
 """
 
 import json
-import os
 import sys
 
+from repro.launch.mesh import force_host_device_count
+
 D = int(sys.argv[1]) if len(sys.argv) > 1 else 4
-os.environ["XLA_FLAGS"] = (
-    f"--xla_force_host_platform_device_count={D} "
-    + os.environ.get("XLA_FLAGS", "")
-).strip()
-os.environ.setdefault("JAX_PLATFORMS", "cpu")
+force_host_device_count(D)
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402

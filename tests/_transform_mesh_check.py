@@ -24,19 +24,14 @@ Usage: python tests/_transform_mesh_check.py [D]
 """
 
 import json
-import os
-import re
 import sys
 
+from repro.launch.mesh import force_host_device_count
+
 D = int(sys.argv[1]) if len(sys.argv) > 1 else 4
-# drop any inherited device-count override (e.g. the 512-device flag the
-# dryrun tests export into the parent's os.environ) — ours must win
-_flags = re.sub(r"--xla_force_host_platform_device_count=\S+", "",
-                os.environ.get("XLA_FLAGS", ""))
-os.environ["XLA_FLAGS"] = (
-    f"--xla_force_host_platform_device_count={D} " + _flags
-).strip()
-os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# the helper drops any inherited device-count override (e.g. the
+# 512-device flag the dryrun tests export into the parent's os.environ)
+force_host_device_count(D)
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402

@@ -1,6 +1,9 @@
 """Host engines: thread pool semantics, for-loop equivalence, worker
-error propagation, scheduling mirror."""
+error propagation, scheduling mirror, shutdown robustness."""
 
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -138,6 +141,47 @@ def test_subprocess_worker_exception_propagates_and_close_idempotent():
     finally:
         pool.close()
         pool.close()  # idempotent
+
+
+def test_close_under_backpressure_does_not_hang():
+    """close() on a pool whose consumer vanished mid-flight: results
+    saturate the StateBufferQueue, workers wedge in acquire_slot, and
+    the action ring still holds unconsumed work.  close() must return
+    promptly (bounded sentinel enqueue + workers polling _running), not
+    block on the full ring or wait out wedged workers."""
+    pool = repro.make("CartPole-v1", engine="thread", num_envs=8,
+                      batch_size=4, num_threads=2)
+    pool.async_reset()          # 8 results; never recv'd -> buffer fills
+    time.sleep(0.5)             # let workers wedge under backpressure
+    t0 = time.monotonic()
+    pool.close()
+    assert time.monotonic() - t0 < 8.0
+    for t in pool._threads:
+        t.join(timeout=5.0)
+        assert not t.is_alive()
+
+
+def test_dropped_pool_does_not_block_exit():
+    """A pool that is never close()d — and whose results are never
+    recv'd — must not keep the interpreter alive (daemon workers +
+    robust close() from __del__ at shutdown)."""
+    code = (
+        "import repro, time\n"
+        "pool = repro.make('CartPole-v1', engine='thread', num_envs=8,\n"
+        "                  batch_size=4, num_threads=2)\n"
+        "pool.async_reset()\n"  # saturates the state buffer, no recv
+        "time.sleep(0.5)\n"
+        "print('DROPPED')\n"    # ... and just fall off the end
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    t0 = time.monotonic()
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=60)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "DROPPED" in proc.stdout
+    assert time.monotonic() - t0 < 60.0
 
 
 def test_episode_stats_flow_through_info():

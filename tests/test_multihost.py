@@ -1,0 +1,121 @@
+"""Multi-host mesh contract (core/protocol.py): a MeshEnvPool on a
+process-SPANNING mesh serves the same streams as the same-size
+single-process mesh, bitwise — and the hot path never moves env data
+between shards.
+
+The tier-1 process sees ONE device (conftest harness contract), so both
+topologies run in fresh interpreters via tests/_multihost_check.py:
+
+  * ``solo``   — 1 process, 2 simulated devices, mesh=2;
+  * ``rank``   — 2 loopback processes (``jax.distributed`` via
+    ``launch.mesh.initialize_multihost``), 1 device each, mesh=2.
+
+Same scripted rollout, same global mesh size — only the process
+topology differs.  Everything observable (served streams, emission
+order, ``stats()`` counters) must be identical, and the compiled-HLO
+audit must show only the two permitted fixed-size collectives.
+"""
+
+import json
+import os
+import socket
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+CHECK = os.path.join(ROOT, "tests", "_multihost_check.py")
+
+# the comparable payload: everything a driver can observe from a rollout
+STREAM_KEYS = ("stream_sha", "ids", "done", "rew", "stats")
+
+
+def _json_tail(stdout: str) -> dict:
+    lines = [ln for ln in stdout.splitlines() if ln.startswith("{")]
+    assert lines, f"no JSON in checker output: {stdout[-2000:]}"
+    return json.loads(lines[-1])
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+@pytest.fixture(scope="module")
+def runs():
+    """(solo, rank0, rank1) checker results — spawned once per module."""
+    p = subprocess.run([sys.executable, CHECK, "solo"], env=ENV,
+                       capture_output=True, text=True, timeout=600)
+    assert p.returncode == 0, p.stderr[-2000:]
+    solo = _json_tail(p.stdout)
+
+    port = _free_port()
+    procs = [
+        subprocess.Popen([sys.executable, CHECK, "rank", str(i), str(port)],
+                         env=ENV, stdout=subprocess.PIPE,
+                         stderr=subprocess.PIPE, text=True)
+        for i in range(2)
+    ]
+    outs = []
+    try:
+        for p in procs:
+            outs.append((p.communicate(timeout=600), p.returncode))
+    finally:
+        for p in procs:
+            p.kill()
+    for (out, err), rc in outs:
+        assert rc == 0, err[-2000:]
+    r0, r1 = (_json_tail(out) for (out, err), rc in outs)
+    return solo, r0, r1
+
+
+def test_process_topology(runs):
+    solo, r0, r1 = runs
+    assert solo["meta"]["process_count"] == 1
+    assert solo["meta"]["devices"] == 2
+    for i, r in enumerate((r0, r1)):
+        assert r["meta"]["process_count"] == 2
+        assert r["meta"]["process_id"] == i
+        assert r["meta"]["devices"] == 2          # global view on each rank
+        assert r["meta"]["coordinator"].startswith("127.0.0.1:")
+
+
+def test_bitwise_stream_and_stats_invariance(runs):
+    """The acceptance pin: same scripted rollout, same mesh size, any
+    process topology -> identical streams AND identical stats()."""
+    solo, r0, r1 = runs
+    for key in STREAM_KEYS:
+        assert solo["rollout"][key] == r0["rollout"][key], key
+        assert r0["rollout"][key] == r1["rollout"][key], key
+
+
+def test_fifo_hot_path_has_no_collectives(runs):
+    """fifo + no transforms: shards never talk — in ANY topology."""
+    for r in runs:
+        assert r["rollout"]["fifo_collectives"] == []
+
+
+def test_hot_path_collectives_fixed_size_only(runs):
+    """hierarchical + NormalizeObs: every collective in the compiled
+    step program stays far below one served env-data block — the (D, C)
+    cost all_gather and the moment psum are the only survivors."""
+    limit = 2048
+    for r in runs:
+        audit = r["audit"]
+        assert audit["block_bytes"] > limit     # the bound is meaningful
+        assert audit["ops"], "expected the two permitted collectives"
+        for op in audit["ops"]:
+            assert op["bytes"] <= limit, op
+
+
+def test_cross_host_collectives_are_the_permitted_two(runs):
+    """On the process-spanning mesh the audit must show the scheduler's
+    cost all-gather and the moment all-reduce — and nothing else."""
+    _, r0, _ = runs
+    kinds = {op["op"] for op in r0["audit"]["ops"]}
+    assert "all-gather" in kinds
+    assert "all-reduce" in kinds
+    assert kinds <= {"all-gather", "all-reduce"}
